@@ -1,0 +1,187 @@
+"""The 11-kernel evaluation suite (Table 4 analogue).
+
+The paper evaluates CUDA kernels from graphics + Rodinia; those binaries
+target a GPU simulator we don't have, so each entry here is a small JAX
+kernel of the *same computational family and quality metric*:
+
+    group 1 (SSIM):    deferred, ssao, elevated, pathtracer
+    group 2 (%dev):    cfd, dwt2d, hotspot, hotspot3d, imgvf, gicov
+    group 3 (binary):  hybridsort
+
+Every kernel runs through the full static framework (range analysis +
+precision tuning + slice allocation — Fig. 7) at the *perfect* and *high*
+thresholds of Section 6.1, yielding the Fig. 9/10/11 reproductions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.range_analysis import Interval
+
+N = 16                                   # image side for the demo kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class SuiteKernel:
+    name: str
+    fn: Callable
+    samples: List[Tuple]
+    metric: str                          # ssim | deviation | binary
+    warps_per_block: int                 # Table 4
+    input_ranges: Optional[Sequence[Optional[Interval]]] = None
+    shared_bytes: int = 0
+
+
+def _img(key, shape=(N, N)):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape)
+
+
+# -- group 1: graphics (SSIM) -------------------------------------------------
+
+def deferred(albedo, normal_z, depth):
+    light = jnp.clip(normal_z, 0.0, 1.0)
+    fog = jnp.exp(-depth * 0.5)
+    return albedo * light * fog + 0.1 * albedo
+
+
+def ssao(depth, noise):
+    acc = jnp.zeros_like(depth)
+    for dx, dy in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+        nb = jnp.roll(jnp.roll(depth, dx, 0), dy, 1)
+        acc = acc + jnp.clip(depth - nb + 0.02, 0.0, 0.1)
+    occ = 1.0 - 2.0 * acc
+    return jnp.clip(occ + 0.05 * noise, 0.0, 1.0)
+
+
+def elevated(seed_img):
+    h = seed_img
+    amp = 0.5
+    for _ in range(4):                    # fBm-style octaves
+        h = h + amp * jnp.sin(h * 7.0 + amp)
+        amp = amp * 0.5
+    gx = jnp.roll(h, 1, 0) - h
+    shade = jnp.clip(0.5 + 2.0 * gx, 0.0, 1.0)
+    return shade
+
+
+def pathtracer(origin, noise):
+    col = jnp.zeros_like(origin)
+    t = origin
+    for _ in range(3):                    # 3 bounces
+        d = jnp.sqrt(t * t + 0.1)
+        hit = jnp.exp(-d)
+        col = col + hit * (0.6 + 0.4 * noise)
+        t = t * 0.7 + 0.1 * noise
+    return col / 3.0
+
+
+# -- group 2: Rodinia-like (% deviation) ---------------------------------------
+
+def cfd(rho, mom):
+    for _ in range(3):
+        flux = 0.25 * (jnp.roll(rho, 1, 0) + jnp.roll(rho, -1, 0)
+                       + jnp.roll(rho, 1, 1) + jnp.roll(rho, -1, 1))
+        rho = rho + 0.1 * (flux - rho) + 0.01 * mom
+        mom = mom * 0.99
+    return rho
+
+
+def dwt2d(img):
+    a = (img[0::2, :] + img[1::2, :]) * 0.5
+    d = (img[0::2, :] - img[1::2, :]) * 0.5
+    aa = (a[:, 0::2] + a[:, 1::2]) * 0.5
+    ad = (a[:, 0::2] - a[:, 1::2]) * 0.5
+    return jnp.concatenate(
+        [jnp.concatenate([aa, ad], 1),
+         jnp.concatenate([(d[:, 0::2] + d[:, 1::2]) * 0.5,
+                          (d[:, 0::2] - d[:, 1::2]) * 0.5], 1)], 0)
+
+
+def hotspot(temp, power):
+    # integer tile-coordinate path (the DWT2D/Hotspot narrow-int story of
+    # Section 6.1): border cells are identified with integer arithmetic
+    rows = jnp.arange(temp.shape[0])          # [0, N)  -> 4-5 bits
+    cols = jnp.arange(temp.shape[1])
+    border = ((rows[:, None] % (temp.shape[0] - 1)) == 0) | (
+        (cols[None, :] % (temp.shape[1] - 1)) == 0)
+    for _ in range(4):
+        up = jnp.roll(temp, 1, 0)
+        dn = jnp.roll(temp, -1, 0)
+        lf = jnp.roll(temp, 1, 1)
+        rt = jnp.roll(temp, -1, 1)
+        delta = 0.1 * (up + dn + lf + rt - 4 * temp) + 0.05 * power
+        temp = jnp.where(border, temp, temp + delta)
+    return temp
+
+
+def hotspot3d(temp, power):
+    for _ in range(2):
+        acc = -6.0 * temp
+        for ax in range(3):
+            acc = acc + jnp.roll(temp, 1, ax) + jnp.roll(temp, -1, ax)
+        temp = temp + 0.08 * acc + 0.04 * power
+    return temp
+
+
+def imgvf(grad, mask):
+    """Image gradient vector flow iteration (the Leukocyte kernel of
+    Table 1): diffuse the gradient field under a data constraint."""
+    v = grad
+    for _ in range(5):
+        lap = (jnp.roll(v, 1, 0) + jnp.roll(v, -1, 0)
+               + jnp.roll(v, 1, 1) + jnp.roll(v, -1, 1) - 4 * v)
+        v = v + 0.2 * lap - 0.1 * mask * (v - grad)
+    return v
+
+
+def gicov(img, kernel_row):
+    score = jnp.zeros_like(img)
+    for k in range(4):
+        shifted = jnp.roll(img, k - 2, 1)
+        score = score + shifted * kernel_row[k]
+    mean = score / 4.0
+    var = (score - mean) ** 2 + 1e-3
+    return mean / var
+
+
+# -- group 3: binary ------------------------------------------------------------
+
+def hybridsort(values):
+    """Bucket-histogram + full sort; binary metric = exact order."""
+    buckets = jnp.clip((values * 8).astype(jnp.int32), 0, 7)
+    hist = jnp.zeros((8,), jnp.int32).at[buckets].add(1)
+    order = jnp.argsort(values)
+    return values[order] + 0.0 * hist[0]
+
+
+def build_suite() -> Dict[str, SuiteKernel]:
+    i = _img
+    return {
+        "Deferred": SuiteKernel(
+            "Deferred", deferred, [(i(0), i(1), i(2))], "ssim", 8),
+        "SSAO": SuiteKernel("SSAO", ssao, [(i(3), i(4))], "ssim", 8),
+        "Elevated": SuiteKernel("Elevated", elevated, [(i(5),)], "ssim", 8),
+        "Pathtracer": SuiteKernel(
+            "Pathtracer", pathtracer, [(i(6), i(7))], "ssim", 8),
+        "CFD": SuiteKernel("CFD", cfd, [(i(8), i(9))], "deviation", 6),
+        "DWT2D": SuiteKernel("DWT2D", dwt2d, [(i(10),)], "deviation", 6),
+        "Hotspot": SuiteKernel(
+            "Hotspot", hotspot, [(i(11), i(12))], "deviation", 8),
+        "Hotspot3D": SuiteKernel(
+            "Hotspot3D", hotspot3d,
+            [(_img(13, (8, 8, 8)), _img(14, (8, 8, 8)))], "deviation", 8),
+        "IMGVF": SuiteKernel(
+            "IMGVF", imgvf, [(i(15), i(16))], "deviation", 10,
+            shared_bytes=14560),
+        "GICOV": SuiteKernel(
+            "GICOV", gicov,
+            [(i(17), jax.random.uniform(jax.random.PRNGKey(18), (4,)))],
+            "deviation", 6),
+        "Hybridsort": SuiteKernel(
+            "Hybridsort", hybridsort, [(i(19),)], "binary", 8),
+    }

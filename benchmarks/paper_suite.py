@@ -1,0 +1,197 @@
+"""Paper-figure reproductions: one function per table/figure.
+
+Each returns (rows, derived) where rows feed the CSV printer in run.py.
+GPGPU-Sim is unavailable, so IPC comes from the mechanistic SM model in
+``repro.core.smsim`` (scoreboard + GTO schedulers + operand-collector
+timing) — the *mechanism* reproduction; occupancy and area numbers are
+exact arithmetic reproductions.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.kernel_suite import build_suite
+from repro.core.area_model import fermi_area, fermi_total, volta_area
+from repro.core.compress import compress_kernel
+from repro.core.occupancy import FERMI, occupancy
+from repro.core.quality import QualitySpec
+from repro.core.smsim import (
+    BASELINE_PIPE,
+    PROPOSED_PIPE,
+    KernelProfile,
+    build_trace,
+    simulate,
+    writeback_sensitivity,
+)
+
+PERFECT_T = {"ssim": 1.0, "deviation": 0.0, "binary": 0.0}
+HIGH_T = {"ssim": 0.9, "deviation": 10.0, "binary": 0.0}
+
+
+_CACHE: Dict[str, Dict] = {}
+
+
+def suite_results() -> Dict[str, Dict]:
+    """Pressure at perfect/high for the full framework + parts in
+    isolation (Fig. 9's six bars), cached across benchmarks."""
+    if _CACHE:
+        return _CACHE
+    suite = build_suite()
+    for name, k in suite.items():
+        t0 = time.perf_counter()
+        perfect = compress_kernel(
+            name, k.fn, k.samples, QualitySpec(k.metric,
+                                               PERFECT_T[k.metric]),
+            input_ranges=k.input_ranges)
+        high = compress_kernel(
+            name, k.fn, k.samples, QualitySpec(k.metric, HIGH_T[k.metric]),
+            input_ranges=k.input_ranges)
+
+        _CACHE[name] = {
+            "metric": k.metric,
+            "warps": k.warps_per_block,
+            "shared_bytes": k.shared_bytes,
+            "baseline": perfect.baseline_pressure,
+            "ints_only": perfect.repressure(True, False),
+            "floats_perfect": perfect.repressure(False, True),
+            "floats_high": high.repressure(False, True),
+            "both_perfect": perfect.packed_pressure,
+            "both_high": high.packed_pressure,
+            "seconds": time.perf_counter() - t0,
+        }
+    return _CACHE
+
+
+def bench_table1() -> List[Tuple[str, float, str]]:
+    """Table 1: IMGVF pressure/occupancy/IPC chain."""
+    t0 = time.perf_counter()
+    orig = occupancy(52, 10)
+    packed = occupancy(29, 10)
+    prof = KernelProfile("imgvf", n_instructions=600, frac_mem=0.10,
+                         frac_sfu=0.03, dep_distance=4, seed=1)
+    trace = build_trace(prof)
+    ipc_orig = simulate(trace, orig.warps, BASELINE_PIPE).ipc
+    ipc_packed = simulate(trace, packed.warps, PROPOSED_PIPE).ipc
+    ipc_artificial = simulate(trace, packed.warps, BASELINE_PIPE).ipc
+    us = (time.perf_counter() - t0) * 1e6
+    rows = [
+        ("table1.occupancy_orig", us, f"{orig.occupancy:.3f}"),
+        ("table1.occupancy_packed", us, f"{packed.occupancy:.3f}"),
+        ("table1.ipc_orig", us, f"{ipc_orig:.1f}"),
+        ("table1.ipc_packed_rf", us, f"{ipc_packed:.1f}"),
+        ("table1.ipc_artificial", us, f"{ipc_artificial:.1f}"),
+        ("table1.ipc_uplift", us,
+         f"{(ipc_packed / ipc_orig - 1) * 100:.1f}%"),
+    ]
+    return rows
+
+
+def bench_fig9_pressure() -> List[Tuple[str, float, str]]:
+    rows = []
+    for name, r in suite_results().items():
+        us = r["seconds"] * 1e6
+        rows.append((
+            f"fig9.{name}", us,
+            f"orig={r['baseline']};ints={r['ints_only']};"
+            f"fp_perfect={r['floats_perfect']};fp_high={r['floats_high']};"
+            f"both_perfect={r['both_perfect']};both_high={r['both_high']}",
+        ))
+    return rows
+
+
+# Table 4: the CUDA kernels' register usage per thread. Our JAX suite is
+# a miniature (16x16 images -> 3-8 live registers), so the occupancy/IPC
+# figures anchor the *absolute* pressure at Table 4 and apply our
+# *measured reduction ratios* — the framework supplies the ratios, the
+# paper supplies the scale of the real kernels.
+TABLE4_REGS = {
+    "Deferred": 47, "SSAO": 28, "Elevated": 46, "Pathtracer": 50,
+    "CFD": 60, "DWT2D": 38, "Hotspot": 31, "Hotspot3D": 42,
+    "IMGVF": 52, "GICOV": 24, "Hybridsort": 36,
+}
+
+
+def _scaled(r: Dict, key: str) -> int:
+    scale = TABLE4_REGS[r["name"]] / max(r["baseline"], 1)
+    return max(int(round(r[key] * scale)), 1)
+
+
+def bench_fig10_occupancy() -> List[Tuple[str, float, str]]:
+    rows = []
+    for name, r in suite_results().items():
+        r = dict(r, name=name)
+        o = occupancy(_scaled(r, "baseline"), r["warps"],
+                      r["shared_bytes"])
+        p = occupancy(_scaled(r, "both_perfect"), r["warps"],
+                      r["shared_bytes"])
+        h = occupancy(_scaled(r, "both_high"), r["warps"],
+                      r["shared_bytes"])
+        rows.append((
+            f"fig10.{name}", 0.0,
+            f"orig={o.occupancy:.3f};perfect={p.occupancy:.3f};"
+            f"high={h.occupancy:.3f};scale=table4",
+        ))
+    return rows
+
+
+def bench_fig11_ipc() -> List[Tuple[str, float, str]]:
+    """Modeled IPC at the Fig. 10 occupancies (proposed pipeline for the
+    packed configurations, baseline pipeline for the original)."""
+    rows = []
+    for name, r in suite_results().items():
+        t0 = time.perf_counter()
+        prof = KernelProfile(name, n_instructions=400,
+                             frac_mem=0.12, frac_sfu=0.04,
+                             dep_distance=4, seed=hash(name) % 1000)
+        trace = build_trace(prof)
+        r = dict(r, name=name)
+        o = occupancy(_scaled(r, "baseline"), r["warps"],
+                      r["shared_bytes"])
+        p = occupancy(_scaled(r, "both_perfect"), r["warps"],
+                      r["shared_bytes"])
+        h = occupancy(_scaled(r, "both_high"), r["warps"],
+                      r["shared_bytes"])
+        ipc_o = simulate(trace, o.warps, BASELINE_PIPE).ipc
+        ipc_p = simulate(trace, p.warps, PROPOSED_PIPE).ipc
+        ipc_h = simulate(trace, h.warps, PROPOSED_PIPE).ipc
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"fig11.{name}", us,
+            f"orig={ipc_o:.1f};perfect={ipc_p:.1f};high={ipc_h:.1f};"
+            f"uplift_high={(ipc_h / ipc_o - 1) * 100:.1f}%",
+        ))
+    return rows
+
+
+def bench_fig12_writeback() -> List[Tuple[str, float, str]]:
+    rows = []
+    for name in ("Deferred", "Elevated", "IMGVF", "GICOV"):
+        t0 = time.perf_counter()
+        r = dict(suite_results()[name], name=name)
+        prof = KernelProfile(name, n_instructions=400, frac_mem=0.12,
+                             frac_sfu=0.04, dep_distance=4,
+                             seed=hash(name) % 1000)
+        occ = occupancy(_scaled(r, "both_high"), r["warps"],
+                        r["shared_bytes"])
+        sens = writeback_sensitivity(prof, occ.warps)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"fig12.{name}", us,
+            ";".join(f"wb{d}={v:.1f}" for d, v in sens.items()),
+        ))
+    return rows
+
+
+def bench_area_table() -> List[Tuple[str, float, str]]:
+    a = fermi_area()
+    v = volta_area()
+    return [
+        ("area.fermi_per_sm", 0.0, str(a.total_per_sm)),
+        ("area.fermi_total", 0.0, str(fermi_total())),
+        ("area.fermi_fraction", 0.0, f"{fermi_total() / 3.1e9:.4f}"),
+        ("area.volta_per_sm", 0.0, str(v["per_sm"])),
+        ("area.volta_fraction", 0.0, f"{v['fraction']:.4f}"),
+    ]

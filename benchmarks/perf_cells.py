@@ -1,0 +1,73 @@
+"""§Perf hillclimb rows: the three chosen cells' before/after terms.
+
+Reads the persisted measurement artifacts under
+``benchmarks/results/perf/`` (written during the hypothesis loop; see
+EXPERIMENTS.md section Perf for the narrative) and emits the roofline
+terms per iteration, plus the analytical fused-kernel point for the
+decode cell.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional, Tuple
+
+from repro.configs import get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+PERF_DIR = os.path.join(os.path.dirname(__file__), "results", "perf")
+
+
+def _load(name: str) -> Optional[dict]:
+    path = os.path.join(PERF_DIR, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("status") == "OK":
+                return r
+    return None
+
+
+def _terms(r: dict) -> str:
+    return (f"compute={r['flops'] / PEAK_FLOPS:.3f}s;"
+            f"memory={r['bytes_accessed'] / HBM_BW:.3f}s;"
+            f"collective={r['collectives']['total_bytes'] / LINK_BW:.3f}s")
+
+
+def bench_perf() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    files = [
+        ("perf.qwen3_train.A1_ce_onehot", "qwen3_train_iterA1.jsonl"),
+        ("perf.qwen3_train.A2_bf16_flash", "qwen3_train_iterA2.jsonl"),
+        ("perf.qwen3_train.A3_kv_replicate", "qwen3_train_iterA3.jsonl"),
+        ("perf.granite_decode.bf16_baseline", "granite_decode_bf16.jsonl"),
+        ("perf.granite_decode.af16_software", "granite_decode_af16.jsonl"),
+        ("perf.granite_decode.af8_software", "granite_decode_af8.jsonl"),
+        ("perf.deepseek_train.C1_cap_sharded", "deepseek_train_c1.jsonl"),
+    ]
+    for name, fname in files:
+        r = _load(fname)
+        if r:
+            rows.append((name, 0.0, _terms(r)))
+
+    # analytical fused-kernel point for granite decode (Pallas kv_decode
+    # + packed_matmul: packed bytes stream once, no materialized unpack)
+    cfg = get_config("granite_34b")
+    devices = 256
+    b, s = 128, 32768
+    for bits, tag in ((16, "bf16"), (8, "af8")):
+        w_bytes = cfg.n_params() * 2 / devices       # weights bf16 resident
+        if bits < 16:
+            w_bytes = cfg.n_params() * bits / 8 / devices
+        kv_bytes = cfg.kv_bytes_per_token(bits) * s * b / devices
+        total = w_bytes + kv_bytes
+        rows.append((
+            f"perf.granite_decode.fused_{tag}", 0.0,
+            f"memory={total / HBM_BW:.4f}s;bytes={total:.3e};analytical",
+        ))
+    return rows

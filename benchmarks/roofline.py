@@ -1,0 +1,153 @@
+"""Roofline analysis over the dry-run census (EXPERIMENTS.md section
+Roofline).
+
+Reads benchmarks/results/dryrun/cells.jsonl (written by
+``python -m repro.launch.dryrun``) and derives, per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs / peak_FLOPs            [s, per device]
+    memory term     = HLO_bytes / HBM_bw                [s, per device]
+    collective term = collective_bytes / link_bw        [s, per device]
+
+The census values are per-device-per-step, so dividing by per-chip peaks
+is the same as the spec's fleet-level ratio (global = per-device x chips
+in both numerator and denominator). MODEL_FLOPS uses 6*N*D (train) /
+2*N_active*D (inference) with D = tokens processed per step.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import get_config
+from repro.models.config import ALL_SHAPES
+
+PEAK_FLOPS = 197e12            # bf16 / chip
+HBM_BW = 819e9                 # B/s / chip
+LINK_BW = 50e9                 # B/s / link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun",
+                       "cells.jsonl")
+
+
+def load_cells(path: str = RESULTS) -> Dict[Tuple[str, str, str], dict]:
+    cells: Dict[Tuple[str, str, str], dict] = {}
+    if not os.path.exists(path):
+        return cells
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["mesh"])
+            cells[key] = r                    # last write wins (reruns)
+    return cells
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int,
+                           data_shards: int) -> float:
+    cfg = get_config(arch)
+    shape = next(s for s in ALL_SHAPES if s.name == shape_name)
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:                                     # decode: one token per seq
+        total = 2.0 * n_active * shape.global_batch
+    return total / devices
+
+
+def roofline_row(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "OK":
+        return None
+    devices = rec["devices"]
+    mesh = rec["mesh"]
+    data_shards = 32 if mesh == "2x16x16" else 16
+    t_compute = rec["flops"] / PEAK_FLOPS
+    t_memory = rec["bytes_accessed"] / HBM_BW
+    t_coll = rec["collectives"]["total_bytes"] / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], devices,
+                                data_shards)
+    step_time = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": mesh,
+        "kind": rec["kind"],
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops": rec["flops"],
+        "useful_compute_frac": mf / rec["flops"] if rec["flops"] else 0.0,
+        # roofline fraction: achievable FLOP/s vs peak if the dominant
+        # term fully serializes (min-bound; overlap can only improve it)
+        "roofline_frac": (mf / PEAK_FLOPS) / step_time
+        if step_time else 0.0,
+        "compile_s": rec.get("compile_s"),
+        "peak_bytes": (rec.get("memory") or {}).get("peak_bytes"),
+    }
+
+
+def full_table(path: str = RESULTS) -> List[dict]:
+    rows = []
+    for rec in load_cells(path).values():
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+        elif rec.get("status") == "SKIP":
+            rows.append({
+                "arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "kind": rec.get("kind"),
+                "dominant": "SKIP", "reason": rec.get("reason", ""),
+            })
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    return rows
+
+
+def bench_roofline() -> List[Tuple[str, float, str]]:
+    """CSV rows for benchmarks.run: one per dry-run cell."""
+    out = []
+    for r in full_table():
+        name = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+        if r["dominant"] == "SKIP":
+            out.append((name, 0.0, "SKIP"))
+            continue
+        out.append((
+            name, 0.0,
+            f"compute={r['compute_s']:.3f}s;memory={r['memory_s']:.3f}s;"
+            f"collective={r['collective_s']:.3f}s;dom={r['dominant']};"
+            f"useful={r['useful_compute_frac']:.2f};"
+            f"roofline_frac={r['roofline_frac']:.3f}",
+        ))
+    return out
+
+
+def markdown_table(path: str = RESULTS) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in full_table(path):
+        if r["dominant"] == "SKIP":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — "
+                f"| SKIP | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | **{r['dominant']}** "
+            f"| {r['useful_compute_frac']:.2f} "
+            f"| {r['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

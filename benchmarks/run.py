@@ -1,0 +1,64 @@
+"""Benchmark harness: one function per paper table/figure + framework
+benches. Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig9,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench name filter")
+    args = ap.parse_args()
+
+    from benchmarks.micro import bench_micro
+    from benchmarks.paper_suite import (
+        bench_area_table,
+        bench_fig9_pressure,
+        bench_fig10_occupancy,
+        bench_fig11_ipc,
+        bench_fig12_writeback,
+        bench_table1,
+    )
+    from benchmarks.perf_cells import bench_perf
+    from benchmarks.roofline import bench_roofline
+    from benchmarks.serving_residency import bench_residency
+
+    benches = {
+        "table1": bench_table1,
+        "fig9": bench_fig9_pressure,
+        "fig10": bench_fig10_occupancy,
+        "fig11": bench_fig11_ipc,
+        "fig12": bench_fig12_writeback,
+        "area": bench_area_table,
+        "micro": bench_micro,
+        "residency": bench_residency,
+        "perf": bench_perf,
+        "roofline": bench_roofline,
+    }
+    selected = (set(args.only.split(",")) if args.only else set(benches))
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in benches.items():
+        if name not in selected:
+            continue
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"{failed} benchmark group(s) failed")
+
+
+if __name__ == "__main__":
+    main()

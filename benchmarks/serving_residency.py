@@ -1,0 +1,54 @@
+"""Serving residency/throughput model per arch x KV width — the TPU
+deployment of Table 1's occupancy chain (DESIGN.md section 2).
+
+For each LM arch: how many 32k-context sequences fit per 8-chip serving
+slice at KV widths 32/16/12/8, and the modeled decode throughput
+(min of weight-read, KV-read and compute times at the resulting batch).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.configs import ARCHS, get_config
+from repro.core.occupancy import TPU_V5E, decode_residency
+
+TP = 8                       # serving slice
+SEQ = 32768
+
+
+def bench_residency() -> List[Tuple[str, float, str]]:
+    rows = []
+    for arch in ARCHS:
+        if arch == "paper_native":
+            continue
+        cfg = get_config(arch)
+        if cfg.family == "ssm":
+            # state is O(1): occupancy is bounded by weights only
+            pass
+        weight_bits = cfg.compression.weight_bits or 16
+        wb = cfg.n_params() * weight_bits // 8 // TP
+        base = None
+        parts = []
+        for kv_bits in (32, 16, 12, 8):
+            kvt = max(cfg.kv_bytes_per_token(kv_bits) // TP, 1) \
+                if cfg.kv_bytes_per_token(16) else 1
+            r = decode_residency(
+                weight_bytes=wb, kv_bytes_per_token=kvt, seq_len=SEQ,
+                flops_per_token=2.0 * cfg.n_active_params() / TP,
+            )
+            bsz = max(r.max_sequences, 0)
+            # decode step time: weights once + KV per seq + compute
+            t_w = wb / TPU_V5E.hbm_bw
+            t_kv = bsz * kvt * SEQ / TPU_V5E.hbm_bw
+            t_c = bsz * 2.0 * cfg.n_active_params() / TP / \
+                TPU_V5E.peak_flops_bf16
+            step = max(t_w + t_kv, t_c)
+            thru = bsz / step if step > 0 else 0.0
+            if kv_bits == 32:
+                base = thru or 1.0
+            parts.append(
+                f"kv{kv_bits}:seqs={bsz},tok/s={thru:.0f}"
+                f",x{thru / base:.2f}" if base else
+                f"kv{kv_bits}:seqs={bsz}")
+        rows.append((f"residency.{arch}", 0.0, ";".join(parts)))
+    return rows

@@ -1,0 +1,175 @@
+"""Dense bitstream packing of narrow codes into 32-bit words.
+
+This is the storage substrate of the proposed register file: operands of
+``w`` bits (w a multiple of the 4-bit slice size, 4..32) are laid out
+back-to-back in a pool of 32-bit physical words. A single operand may
+straddle a word boundary — the paper's "architectural register split into
+two physical registers" (Section 4.3) — in which case reads fetch two
+words and OR the parts together, exactly like the extended collector
+unit's 1024-bit OR gate (Section 3.2.4).
+
+All routines are vectorized jnp (scatter-add for pack, double-gather + OR
+for unpack) so they jit/lower on any backend; the Pallas kernels reuse the
+same arithmetic with VMEM tiling.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import SLICE_BITS
+
+_U32 = jnp.uint32
+
+
+def packed_words(n: int, width: int) -> int:
+    """Number of 32-bit words to store ``n`` codes of ``width`` bits."""
+    _check_width(width)
+    return -(-n * width // 32)
+
+
+def _check_width(width: int) -> None:
+    if not (1 <= width <= 32) or width % SLICE_BITS != 0:
+        raise ValueError(
+            f"width must be a multiple of {SLICE_BITS} in [4, 32], got {width}"
+        )
+
+
+def _width_mask(width: int) -> np.uint32:
+    return np.uint32(0xFFFFFFFF) if width == 32 else np.uint32((1 << width) - 1)
+
+
+def pack_stream(codes: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Pack flat uint32 ``codes`` (low ``width`` bits valid) densely.
+
+    Returns a uint32 array of ``packed_words(len(codes), width)`` words.
+    Element ``i`` occupies bits ``[i*width, (i+1)*width)`` of the stream,
+    little-endian within each word (bit 0 of word 0 is stream bit 0).
+    """
+    _check_width(width)
+    codes = jnp.asarray(codes, _U32).reshape(-1) & _width_mask(width)
+    n = codes.shape[0]
+    n_words = packed_words(n, width)
+    if width == 32:
+        return codes
+
+    start = jnp.arange(n, dtype=_U32) * np.uint32(width)
+    word_lo = (start >> np.uint32(5)).astype(jnp.int32)
+    off = start & np.uint32(31)
+
+    lo_part = codes << off
+    # Portion spilling into the next word. off+width <= 63 so the shift
+    # (32 - off) is in [1, 31] whenever a spill exists (off > 0 required
+    # for a spill since width <= 32).
+    spill = (off + np.uint32(width)) > np.uint32(32)
+    safe_shift = jnp.where(off > 0, np.uint32(32) - off, np.uint32(1))
+    hi_part = jnp.where(spill, codes >> safe_shift, np.uint32(0))
+
+    out = jnp.zeros((n_words + 1,), _U32)  # +1 slack for the last spill
+    # Bit ranges never overlap, so add == bitwise OR here.
+    out = out.at[word_lo].add(lo_part, mode="drop")
+    out = out.at[word_lo + 1].add(hi_part, mode="drop")
+    return out[:n_words]
+
+
+def unpack_stream(packed: jnp.ndarray, width: int, n: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_stream`: extract ``n`` codes of ``width`` bits.
+
+    This is the Value Extractor data path (Fig. 3): gather the word(s)
+    holding each operand, shift-align, OR the two parts, mask.
+    """
+    _check_width(width)
+    packed = jnp.asarray(packed, _U32).reshape(-1)
+    if width == 32:
+        return packed[:n]
+
+    start = jnp.arange(n, dtype=_U32) * np.uint32(width)
+    word_lo = (start >> np.uint32(5)).astype(jnp.int32)
+    off = start & np.uint32(31)
+
+    lo_word = packed[word_lo]
+    hi_idx = jnp.minimum(word_lo + 1, packed.shape[0] - 1)
+    hi_word = packed[hi_idx]
+
+    spill = (off + np.uint32(width)) > np.uint32(32)
+    safe_shift = jnp.where(off > 0, np.uint32(32) - off, np.uint32(1))
+    code = (lo_word >> off) | jnp.where(
+        spill, hi_word << safe_shift, np.uint32(0)
+    )
+    return code & _width_mask(width)
+
+
+def stream_bits(n: int, width: int) -> int:
+    """Total payload bits of a stream (before word rounding)."""
+    _check_width(width)
+    return n * width
+
+
+# ---------------------------------------------------------------------------
+# Group-of-32 layout: the TPU-shardable packing used by the tensor store
+# ---------------------------------------------------------------------------
+# 32 consecutive codes of ``width`` bits occupy exactly ``width`` 32-bit
+# words, so a tensor packed along its last axis keeps *static* word/offset
+# arithmetic (every shift below is a Python constant), stays elementwise
+# (no dynamic gathers -> XLA fuses it, Pallas tiles it), and shards evenly
+# whenever the packed axis length is a multiple of 32 x (shard count).
+# This is the slice/indirection scheme of Section 3.2 re-blocked for a
+# vector unit: the "indirection" collapses to static mux selects exactly
+# like the TVE's mask-driven 9:1 muxes.
+
+GROUP = 32
+
+
+def packed_group_words(n: int, width: int) -> int:
+    """Packed last-dim length for ``n`` codes (padded to a full group)."""
+    _check_width(width)
+    groups = -(-n // GROUP)
+    return groups * width
+
+
+def pack_groups(codes: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Pack codes (..., N) -> words (..., N/32*width), group-of-32 layout."""
+    _check_width(width)
+    codes = jnp.asarray(codes, _U32) & _width_mask(width)
+    n = codes.shape[-1]
+    groups = -(-n // GROUP)
+    pad = groups * GROUP - n
+    if pad:
+        codes = jnp.concatenate(
+            [codes, jnp.zeros(codes.shape[:-1] + (pad,), _U32)], axis=-1
+        )
+    g = codes.reshape(codes.shape[:-1] + (groups, GROUP))
+    words = []
+    for w in range(width):
+        acc = None
+        for j in range(GROUP):
+            s = j * width
+            if s // 32 == w:                       # low part lands here
+                part = g[..., j] << np.uint32(s % 32)
+            elif s // 32 == w - 1 and s % 32 + width > 32:  # spill part
+                part = g[..., j] >> np.uint32(32 - s % 32)
+            else:
+                continue
+            acc = part if acc is None else acc | part
+        words.append(acc)
+    out = jnp.stack(words, axis=-1)                # (..., groups, width)
+    return out.reshape(out.shape[:-2] + (groups * width,))
+
+
+def unpack_groups(words: jnp.ndarray, width: int, n: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_groups`: words (..., G*width) -> codes (..., n)."""
+    _check_width(width)
+    words = jnp.asarray(words, _U32)
+    groups = words.shape[-1] // width
+    g = words.reshape(words.shape[:-1] + (groups, width))
+    cols = []
+    for j in range(GROUP):
+        s = j * width
+        w0, off = s // 32, s % 32
+        lo = g[..., w0] >> np.uint32(off)
+        if off + width > 32:
+            lo = lo | (g[..., w0 + 1] << np.uint32(32 - off))
+        cols.append(lo & _width_mask(width))
+    out = jnp.stack(cols, axis=-1)                 # (..., groups, 32)
+    out = out.reshape(out.shape[:-2] + (groups * GROUP,))
+    return out[..., :n]

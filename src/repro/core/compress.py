@@ -1,0 +1,249 @@
+"""End-to-end static compression flow (Fig. 7).
+
+GPU granularity (the paper's evaluation pipeline, used by the Fig. 9/10/11
+benchmark reproductions):
+
+    trace kernel -> integer range analysis (Section 4.2)
+                 -> float precision tuning vs. quality threshold (4.1)
+                 -> liveness over the SSA program
+                 -> slice allocation + indirection table (4.3)
+    => register pressure before/after, occupancy, IPC model inputs.
+
+Tensor granularity (the framework's deployment path):
+
+    model + sample batch -> per-tensor precision tuning
+                         -> integer width assignment from ranges
+    => a CompressionPlan consumed by the packed store / optimizer / KV
+       cache and by the serving residency planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocator import Allocation, Operand, SliceAllocator
+from repro.core.formats import round_bits_to_slice
+from repro.core.precision_tuning import (
+    QuantizedKernel,
+    TuneResult,
+    tune_kernel,
+    tune_tensors,
+)
+from repro.core.quality import QualitySpec
+from repro.core.range_analysis import Interval, RangeAnalysis, _is_int
+
+
+# ---------------------------------------------------------------------------
+# GPU granularity: per-SSA-value compression of a traced kernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KernelCompression:
+    """Everything Fig. 7 produces for one kernel."""
+
+    name: str
+    allocation: Allocation           # packed
+    baseline_pressure: int           # 32-bit registers, liveness-aware
+    packed_pressure: int
+    float_formats: Dict[int, int]    # vid -> bits
+    int_bits: Dict[str, Tuple[int, bool]]
+    tune_evals: int
+    operands: List[Operand] = dataclasses.field(default_factory=list)
+
+    def repressure(self, use_ints: bool, use_floats: bool,
+                   prefer_contiguous: bool = False) -> int:
+        """Register pressure with only one side of the framework active
+        (Fig. 9's isolated bars), liveness preserved."""
+        ops = [
+            dataclasses.replace(
+                o,
+                bits=o.bits if (o.is_float and use_floats)
+                or ((not o.is_float) and use_ints) else 32,
+            )
+            for o in self.operands
+        ]
+        return SliceAllocator(
+            prefer_contiguous=prefer_contiguous
+        ).allocate(ops).register_pressure
+
+    @property
+    def pressure_reduction(self) -> float:
+        return 1.0 - self.packed_pressure / max(self.baseline_pressure, 1)
+
+
+def _liveness(jaxpr) -> Dict[Any, Tuple[int, int]]:
+    """[def_point, last_use) for every var; inputs defined at -1."""
+    from jax.extend import core as jcore
+
+    def is_var(a) -> bool:
+        return not isinstance(a, jcore.Literal)
+
+    live: Dict[Any, Tuple[int, int]] = {}
+    for i, v in enumerate(jaxpr.invars):
+        live[v] = (0, 1)
+    for v in jaxpr.constvars:
+        live[v] = (0, 1)
+    for t, eqn in enumerate(jaxpr.eqns, start=1):
+        for v in eqn.outvars:
+            live[v] = (t, t + 1)
+        for a in eqn.invars:
+            if is_var(a) and a in live:
+                d, _ = live[a]
+                live[a] = (d, t + 1)
+    end = len(jaxpr.eqns) + 1
+    for v in jaxpr.outvars:
+        if is_var(v) and v in live:
+            d, _ = live[v]
+            live[v] = (d, end)
+    return live
+
+
+def compress_kernel(
+    name: str,
+    fn: Callable,
+    samples: Sequence[Tuple],
+    quality: QualitySpec,
+    input_ranges: Optional[Sequence[Optional[Interval]]] = None,
+    prefer_contiguous: bool = False,
+) -> KernelCompression:
+    """Run the full static framework on one traced kernel."""
+    qk = QuantizedKernel(fn, *samples[0])
+    jaxpr = qk.closed.jaxpr
+
+    # 1. integer ranges (Section 4.2)
+    ra = RangeAnalysis()
+    ranges = list(input_ranges or [])
+    for i, v in enumerate(jaxpr.invars):
+        itv = ranges[i] if i < len(ranges) and ranges[i] else Interval.top()
+        ra._write(v, itv)
+    for v in jaxpr.constvars:
+        ra._write(v, Interval.top())
+    for eqn in jaxpr.eqns:
+        ra._transfer(eqn)
+
+    # 2. float precision tuning (Section 4.1)
+    tuned = tune_kernel(qk, samples, quality)
+
+    # 3. liveness + operands
+    live = _liveness(jaxpr)
+    operands: List[Operand] = []
+    int_bits: Dict[str, Tuple[int, bool]] = {}
+    vid_of = qk._var_vid
+    idx = 0
+    for var, (start, end) in live.items():
+        aval = getattr(var, "aval", None)
+        if aval is None or not hasattr(aval, "dtype"):
+            continue
+        oname = f"v{idx}"
+        idx += 1
+        if np.issubdtype(aval.dtype, np.floating):
+            bits = tuned.formats.get(vid_of.get(var, -1), 32)
+            operands.append(Operand(
+                name=oname, bits=bits, is_float=True, signed=True,
+                start=start, end=end,
+            ))
+        elif _is_int(aval) or np.issubdtype(aval.dtype, np.bool_):
+            itv = ra.env.get(var, Interval.top())
+            b = itv.bits()
+            bits, signed = b if b else (32, True)
+            bits = min(bits, 32)
+            int_bits[oname] = (bits, signed)
+            operands.append(Operand(
+                name=oname, bits=bits, is_float=False, signed=signed,
+                start=start, end=end,
+            ))
+
+    # 4. slice allocation (Section 4.3)
+    alloc = SliceAllocator(prefer_contiguous=prefer_contiguous).allocate(
+        operands
+    )
+    return KernelCompression(
+        name=name,
+        allocation=alloc,
+        baseline_pressure=alloc.baseline_pressure,
+        packed_pressure=alloc.register_pressure,
+        float_formats=dict(tuned.formats),
+        int_bits=int_bits,
+        tune_evals=tuned.evaluations,
+        operands=operands,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tensor granularity: the framework deployment plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompressionPlan:
+    """Per-tensor widths consumed by the packed store.
+
+    ``float_bits``: leaf-path string -> Table 3 width.
+    ``int_bits``:   leaf-path string -> (bits rounded to slices, signed).
+    """
+
+    float_bits: Dict[str, int]
+    int_bits: Dict[str, Tuple[int, bool]]
+    tune_evals: int = 0
+
+    def bits_of(self, path: Tuple[Any, ...], leaf) -> Optional[int]:
+        key = path_str(path)
+        if key in self.float_bits:
+            return self.float_bits[key]
+        if key in self.int_bits:
+            return round_bits_to_slice(self.int_bits[key][0])
+        return None
+
+    def footprint_ratio(self, tensors: Dict[str, jnp.ndarray]) -> float:
+        """Packed bytes / f32 bytes over the planned tensors."""
+        num = 0.0
+        den = 0.0
+        for k, v in tensors.items():
+            n = float(np.prod(np.asarray(v).shape or (1,)))
+            bits = self.float_bits.get(
+                k, round_bits_to_slice(self.int_bits.get(k, (32, True))[0])
+                if k in self.int_bits else 32
+            )
+            num += n * bits
+            den += n * 32
+        return num / max(den, 1.0)
+
+
+def path_str(path: Tuple[Any, ...]) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def plan_tensors(
+    apply_fn: Callable[[Dict[str, jnp.ndarray]], Any],
+    tensors: Dict[str, jnp.ndarray],
+    quality: QualitySpec,
+    int_ranges: Optional[Dict[str, Interval]] = None,
+) -> CompressionPlan:
+    """Tensor-level plan: tune floats, width ints from supplied ranges."""
+    tuned = tune_tensors(apply_fn, tensors, quality)
+    int_bits: Dict[str, Tuple[int, bool]] = {}
+    for k, v in tensors.items():
+        if np.issubdtype(np.asarray(v).dtype, np.integer):
+            itv = (int_ranges or {}).get(k)
+            if itv is None:
+                arr = np.asarray(v)
+                itv = Interval(float(arr.min()), float(arr.max()))
+            b = itv.bits()
+            if b:
+                int_bits[k] = b
+    return CompressionPlan(
+        float_bits={k: b for k, b in tuned.formats.items() if b < 32},
+        int_bits=int_bits,
+        tune_evals=tuned.evaluations,
+    )

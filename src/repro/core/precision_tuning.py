@@ -1,0 +1,239 @@
+"""Floating-point precision tuning (Section 4.1; Angerd et al. 2017).
+
+Two granularities, one algorithm:
+
+* **Instruction level** (the paper's granularity): a quantizing jaxpr
+  interpreter evaluates a traced kernel value-by-value, applying an
+  encode→decode round trip through an assigned Table 3 format after every
+  float-producing equation — each SSA value carries its own bitwidth
+  annotation, exactly like the paper's PTX registers.
+* **Tensor level** (the framework's granularity): parameters / state
+  tensors are the value groups; the same search assigns each tensor a
+  format before it enters the packed store.
+
+The search is the data-driven heuristic of [1]: for each value (largest
+footprint first) find the narrowest ladder format that keeps the
+user-specified quality metric within threshold on the sample inputs,
+holding already-tuned values at their accepted formats; iterate to a
+fixpoint. Quality is only guaranteed for inputs resembling the samples —
+the paper says the same.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.extend import core as jcore
+
+from repro.core.formats import (
+    FLOAT_FORMATS,
+    FLOAT_LADDER,
+    FloatFormat,
+    decode_float,
+    encode_float,
+)
+from repro.core.quality import QualitySpec
+
+
+def quantize_dequantize(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Round-trip ``x`` through the ``bits``-wide Table 3 format."""
+    if bits >= 32:
+        return jnp.asarray(x, jnp.float32)
+    fmt = FLOAT_FORMATS[bits]
+    return decode_float(encode_float(jnp.asarray(x, jnp.float32), fmt), fmt)
+
+
+# ---------------------------------------------------------------------------
+# Instruction-level: quantizing jaxpr interpreter
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ValueInfo:
+    """One float SSA value in the traced kernel."""
+
+    vid: int                        # index into the interpreter's value list
+    prim: str                       # producing primitive name
+    shape: Tuple[int, ...]
+    size: int
+
+
+def _is_float_var(v) -> bool:
+    aval = getattr(v, "aval", None)
+    return (
+        aval is not None
+        and hasattr(aval, "dtype")
+        and np.issubdtype(aval.dtype, np.floating)
+    )
+
+
+class QuantizedKernel:
+    """A traced kernel whose float SSA values can be re-run at assigned
+    bitwidths. ``formats``: dict vid -> total bits (values absent default
+    to 32)."""
+
+    def __init__(self, fn: Callable, *example_args):
+        self.closed = jax.make_jaxpr(fn)(*example_args)
+        self.values: List[ValueInfo] = []
+        self._var_vid: Dict[Any, int] = {}
+        for eqn in self.closed.jaxpr.eqns:
+            for v in eqn.outvars:
+                if _is_float_var(v):
+                    vid = len(self.values)
+                    self.values.append(ValueInfo(
+                        vid=vid,
+                        prim=eqn.primitive.name,
+                        shape=tuple(v.aval.shape),
+                        size=int(np.prod(v.aval.shape or (1,))),
+                    ))
+                    self._var_vid[v] = vid
+
+    def run(self, formats: Dict[int, int], *args):
+        """Evaluate with per-value quantization (32 bits = pass-through)."""
+        jaxpr = self.closed.jaxpr
+        env: Dict[Any, Any] = {}
+
+        def read(a):
+            return a.val if isinstance(a, jcore.Literal) else env[a]
+
+        for v, c in zip(jaxpr.constvars, self.closed.consts):
+            env[v] = c
+        flat = jax.tree_util.tree_leaves(args)
+        for v, a in zip(jaxpr.invars, flat):
+            env[v] = a
+        for eqn in jaxpr.eqns:
+            invals = [read(a) for a in eqn.invars]
+            sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if eqn.primitive.name in ("pjit", "jit", "closed_call") and sub:
+                outs = jcore.jaxpr_as_fun(sub)(*invals)
+            else:
+                outs = eqn.primitive.bind(*invals, **eqn.params)
+            if not eqn.primitive.multiple_results:
+                outs = [outs]
+            for var, val in zip(eqn.outvars, outs):
+                vid = self._var_vid.get(var)
+                if vid is not None:
+                    bits = formats.get(vid, 32)
+                    if bits < 32:
+                        val = quantize_dequantize(val, bits)
+                env[var] = val
+        res = [read(v) for v in jaxpr.outvars]
+        return res[0] if len(res) == 1 else tuple(res)
+
+
+# ---------------------------------------------------------------------------
+# The tuning search (shared by both granularities)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TuneResult:
+    formats: Dict[Any, int]          # value key -> accepted total bits
+    evaluations: int                 # quality-metric evaluations performed
+
+    def mean_bits(self, sizes: Optional[Dict[Any, int]] = None) -> float:
+        if not self.formats:
+            return 32.0
+        if sizes:
+            tot = sum(sizes[k] for k in self.formats)
+            return sum(self.formats[k] * sizes[k] for k in self.formats) / tot
+        return sum(self.formats.values()) / len(self.formats)
+
+
+def _search(
+    keys: Sequence[Any],
+    weight: Callable[[Any], int],
+    acceptable: Callable[[Dict[Any, int]], bool],
+    ladder: Sequence[int] = FLOAT_LADDER,
+    max_passes: int = 2,
+) -> TuneResult:
+    """Greedy largest-first descent with per-value ladder bisection."""
+    formats: Dict[Any, int] = {k: 32 for k in keys}
+    evals = 0
+    rungs = sorted(ladder)           # narrowest first
+
+    for _ in range(max_passes):
+        changed = False
+        for k in sorted(keys, key=weight, reverse=True):
+            current = formats[k]
+            # Bisect the rung list below ``current`` for the narrowest
+            # acceptable format (assumes monotone quality-in-bits, as the
+            # heuristic in [1] does).
+            cand = [b for b in rungs if b < current]
+            lo, hi = 0, len(cand)            # answer in cand[lo:] or keep
+            best = current
+            while lo < hi:
+                mid = (lo + hi) // 2
+                trial = dict(formats)
+                trial[k] = cand[mid]
+                evals += 1
+                if acceptable(trial):
+                    best = cand[mid]
+                    hi = mid
+                else:
+                    lo = mid + 1
+            if best != current:
+                formats[k] = best
+                changed = True
+        if not changed:
+            break
+    return TuneResult(formats=formats, evaluations=evals)
+
+
+def tune_kernel(
+    kernel: QuantizedKernel,
+    samples: Sequence[Tuple],
+    quality: QualitySpec,
+    ladder: Sequence[int] = FLOAT_LADDER,
+    reference: Optional[Sequence[Any]] = None,
+) -> TuneResult:
+    """Instruction-level tuning on a traced kernel (the paper's Fig. 7)."""
+    refs = reference or [kernel.run({}, *s) for s in samples]
+
+    def acceptable(formats: Dict[int, int]) -> bool:
+        for s, r in zip(samples, refs):
+            out = kernel.run(formats, *s)
+            outs = out if isinstance(out, tuple) else (out,)
+            rs = r if isinstance(r, tuple) else (r,)
+            for o, rr in zip(outs, rs):
+                if not quality.accepts(rr, o):
+                    return False
+        return True
+
+    keys = [v.vid for v in kernel.values]
+    return _search(keys, lambda k: kernel.values[k].size, acceptable, ladder)
+
+
+def tune_tensors(
+    apply_fn: Callable[[Dict[str, jnp.ndarray]], Any],
+    tensors: Dict[str, jnp.ndarray],
+    quality: QualitySpec,
+    ladder: Sequence[int] = FLOAT_LADDER,
+    reference: Optional[Any] = None,
+) -> TuneResult:
+    """Tensor-level tuning: assign each named tensor a Table 3 format.
+
+    ``apply_fn`` maps the (quantized) tensor dict to the output the quality
+    metric judges — for an LM this is typically logits on a sample batch.
+    """
+    ref = reference if reference is not None else apply_fn(tensors)
+    float_keys = [
+        k for k, v in tensors.items()
+        if np.issubdtype(np.asarray(v).dtype, np.floating)
+    ]
+
+    def acceptable(formats: Dict[str, int]) -> bool:
+        q = {
+            k: (quantize_dequantize(v, formats[k])
+                if k in formats else v)
+            for k, v in tensors.items()
+        }
+        return quality.accepts(ref, apply_fn(q))
+
+    return _search(
+        float_keys,
+        lambda k: int(np.prod(np.asarray(tensors[k]).shape or (1,))),
+        acceptable,
+        ladder,
+    )

@@ -1,0 +1,107 @@
+"""Output-quality metrics (Section 5.3).
+
+Three metric families drive the precision-tuning loop:
+  * **SSIM** (graphics kernels, Group 1) — structural similarity on images,
+    implemented per Wang et al. 2004 with the standard 11x11 Gaussian
+    window, K1=0.01, K2=0.03.
+  * **%-deviation** (Group 2) — mean relative deviation from the reference
+    output, in percent.
+  * **binary** (Group 3, e.g. Hybridsort) — exact/incorrect.
+
+Thresholds follow Section 6.1: *perfect* = SSIM 1.0 / 0% deviation /
+exact; *high* = SSIM 0.9 / 10% deviation / exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _gaussian_kernel(size: int = 11, sigma: float = 1.5) -> jnp.ndarray:
+    ax = jnp.arange(size, dtype=jnp.float32) - (size - 1) / 2.0
+    g = jnp.exp(-(ax**2) / (2.0 * sigma**2))
+    k = jnp.outer(g, g)
+    return k / jnp.sum(k)
+
+
+def ssim(img_a: jnp.ndarray, img_b: jnp.ndarray,
+         data_range: float = 1.0) -> jnp.ndarray:
+    """Mean SSIM between two HxW (or HxWxC) float images in [0, range]."""
+    a = jnp.asarray(img_a, jnp.float32)
+    b = jnp.asarray(img_b, jnp.float32)
+    if a.ndim == 3:                       # average channel SSIMs
+        vals = [ssim(a[..., c], b[..., c], data_range)
+                for c in range(a.shape[-1])]
+        return jnp.mean(jnp.stack(vals))
+    k = _gaussian_kernel()
+    pad = k.shape[0] // 2
+
+    def _filt(x):
+        x4 = x[None, None]
+        k4 = k[None, None]
+        return jax.lax.conv_general_dilated(
+            x4, k4, (1, 1), [(pad, pad), (pad, pad)]
+        )[0, 0]
+
+    c1 = (0.01 * data_range) ** 2
+    c2 = (0.03 * data_range) ** 2
+    mu_a, mu_b = _filt(a), _filt(b)
+    var_a = _filt(a * a) - mu_a**2
+    var_b = _filt(b * b) - mu_b**2
+    cov = _filt(a * b) - mu_a * mu_b
+    s = ((2 * mu_a * mu_b + c1) * (2 * cov + c2)) / (
+        (mu_a**2 + mu_b**2 + c1) * (var_a + var_b + c2)
+    )
+    return jnp.mean(s)
+
+
+def percent_deviation(ref: jnp.ndarray, out: jnp.ndarray) -> jnp.ndarray:
+    """Mean relative deviation from the reference output, in percent."""
+    ref = jnp.asarray(ref, jnp.float32)
+    out = jnp.asarray(out, jnp.float32)
+    denom = jnp.maximum(jnp.abs(ref), 1e-12)
+    return 100.0 * jnp.mean(jnp.abs(out - ref) / denom)
+
+
+def binary_correct(ref: jnp.ndarray, out: jnp.ndarray) -> bool:
+    """Binary metric: bit-for-bit value equality (e.g. a sorted order)."""
+    return bool(jnp.array_equal(jnp.asarray(ref), jnp.asarray(out)))
+
+
+@dataclasses.dataclass(frozen=True)
+class QualitySpec:
+    """A metric + acceptance predicate, as supplied by the domain expert."""
+
+    kind: str                       # "ssim" | "deviation" | "binary"
+    threshold: float                # SSIM lower bound / max %dev / ignored
+
+    def accepts(self, ref, out) -> bool:
+        if self.kind == "ssim":
+            if self.threshold >= 1.0:       # perfect: bit-identical output
+                return binary_correct(ref, out)
+            return float(ssim(ref, out)) >= self.threshold - 1e-6
+        if self.kind == "deviation":
+            dev = float(percent_deviation(ref, out))
+            if self.threshold <= 0.0:       # perfect: no deviation at all
+                return dev == 0.0
+            return dev <= self.threshold * (1 + 1e-6)
+        if self.kind == "binary":
+            return binary_correct(ref, out)
+        raise ValueError(f"unknown quality metric {self.kind!r}")
+
+
+# Section 6.1 thresholds.
+PERFECT = {
+    "ssim": QualitySpec("ssim", 1.0),
+    "deviation": QualitySpec("deviation", 0.0),
+    "binary": QualitySpec("binary", 0.0),
+}
+HIGH = {
+    "ssim": QualitySpec("ssim", 0.9),
+    "deviation": QualitySpec("deviation", 10.0),
+    "binary": QualitySpec("binary", 0.0),
+}

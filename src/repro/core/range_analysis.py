@@ -1,0 +1,427 @@
+"""Static integer range analysis over jaxprs (Section 4.2, adapted).
+
+The paper runs Pereira et al.'s range analysis on PTX in e-SSA form.
+jaxprs are SSA by construction, so the adaptation is an abstract
+interpretation with an interval domain over every integer-typed value in a
+traced computation. Leaf ranges come from ``input_specs`` metadata (token
+ids bounded by vocab size, positions by sequence length, expert ids by the
+expert count, ...) and propagate through ~40 lax primitives. The final
+step converts each value's interval to a bitwidth exactly like Fig. 8d.
+
+Control flow: jaxprs express loops as ``scan``/``while`` — we iterate the
+body's transfer function to a fixed point with widening (the same
+widen-then-narrow discipline as the CFG analysis in ``repro.core.essa``).
+Branch-correlated refinement (the "e-SSA" part) is reproduced on an
+explicit CFG in ``repro.core.essa`` because jaxpr ``cond`` does not relate
+predicates to operands.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+from repro.core.formats import int_bits_needed
+
+INF = float("inf")
+NEG_INF = float("-inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    """[lo, hi] over the integers; +-inf marks unbounded sides."""
+
+    lo: float
+    hi: float
+
+    def __post_init__(self):
+        if self.lo > self.hi:
+            raise ValueError(f"empty interval [{self.lo}, {self.hi}]")
+
+    @staticmethod
+    def top() -> "Interval":
+        return Interval(NEG_INF, INF)
+
+    @staticmethod
+    def const(v: float) -> "Interval":
+        return Interval(v, v)
+
+    @property
+    def bounded(self) -> bool:
+        return self.lo > NEG_INF and self.hi < INF
+
+    def union(self, other: "Interval") -> "Interval":
+        return Interval(min(self.lo, other.lo), max(self.hi, other.hi))
+
+    def intersect(self, other: "Interval") -> Optional["Interval"]:
+        lo, hi = max(self.lo, other.lo), min(self.hi, other.hi)
+        return Interval(lo, hi) if lo <= hi else None
+
+    def widen(self, other: "Interval") -> "Interval":
+        """Standard interval widening: jump straight to +-inf on growth."""
+        lo = self.lo if other.lo >= self.lo else NEG_INF
+        hi = self.hi if other.hi <= self.hi else INF
+        return Interval(lo, hi)
+
+    def bits(self) -> Optional[Tuple[int, bool]]:
+        """(bits, signed) needed, or None if unbounded (stored at 32)."""
+        if not self.bounded:
+            return None
+        return int_bits_needed(int(self.lo), int(self.hi))
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"[{self.lo}, {self.hi}]"
+
+
+def _mul_bound(a: float, b: float) -> float:
+    if a == 0 or b == 0:
+        return 0.0
+    return a * b
+
+
+def _arith2(a: Interval, b: Interval, op: str) -> Interval:
+    if op == "add":
+        return Interval(a.lo + b.lo, a.hi + b.hi)
+    if op == "sub":
+        return Interval(a.lo - b.hi, a.hi - b.lo)
+    if op == "mul":
+        cs = [_mul_bound(x, y) for x in (a.lo, a.hi) for y in (b.lo, b.hi)]
+        return Interval(min(cs), max(cs))
+    if op == "max":
+        return Interval(max(a.lo, b.lo), max(a.hi, b.hi))
+    if op == "min":
+        return Interval(min(a.lo, b.lo), min(a.hi, b.hi))
+    raise KeyError(op)
+
+
+def _div(a: Interval, b: Interval) -> Interval:
+    if b.lo <= 0 <= b.hi:           # divisor range crosses zero: give up
+        return Interval.top()
+    cs = []
+    for x in (a.lo, a.hi):
+        for y in (b.lo, b.hi):
+            if math.isinf(x) or math.isinf(y):
+                cs.append(NEG_INF)
+                cs.append(INF)
+            else:
+                cs.append(math.floor(x / y))
+    return Interval(min(cs), max(cs))
+
+
+def _rem(a: Interval, b: Interval) -> Interval:
+    """lax.rem truncates toward zero; result sign follows the dividend."""
+    m = max(abs(b.lo), abs(b.hi))
+    if math.isinf(m):
+        return Interval.top()
+    lo = -(m - 1) if a.lo < 0 else 0.0
+    hi = (m - 1) if a.hi > 0 else 0.0
+    # tighter when dividend is already inside [0, m)
+    if a.lo >= 0 and a.hi < m and b.lo > 0:
+        return Interval(a.lo, a.hi)
+    return Interval(lo, hi)
+
+
+def _is_int(aval) -> bool:
+    return (
+        hasattr(aval, "dtype")
+        and np.issubdtype(aval.dtype, np.integer)
+    )
+
+
+class RangeAnalysis:
+    """Abstract interpreter assigning an Interval to every integer value."""
+
+    def __init__(self):
+        self.env: Dict[Any, Interval] = {}
+        self.report: List[Tuple[str, Interval, Optional[Tuple[int, bool]]]] = []
+
+    # -- environment --------------------------------------------------------
+    def _read(self, atom) -> Interval:
+        if isinstance(atom, jcore.Literal):
+            v = np.asarray(atom.val)
+            if np.issubdtype(v.dtype, np.integer) or np.issubdtype(
+                v.dtype, np.bool_
+            ):
+                return Interval(float(v.min()), float(v.max()))
+            return Interval.top()
+        return self.env.get(atom, Interval.top())
+
+    def _write(self, var, itv: Interval) -> None:
+        self.env[var] = itv
+
+    # -- primitive transfer functions ---------------------------------------
+    def _transfer(self, eqn) -> None:
+        prim = eqn.primitive.name
+        ins = [self._read(a) for a in eqn.invars]
+        outs = eqn.outvars
+
+        def out(itv: Interval, i: int = 0) -> None:
+            if i < len(outs):
+                self._write(outs[i], itv)
+
+        if prim in ("add", "sub", "mul", "max", "min"):
+            out(_arith2(ins[0], ins[1], prim))
+        elif prim == "div":
+            out(_div(ins[0], ins[1]))
+        elif prim == "rem":
+            out(_rem(ins[0], ins[1]))
+        elif prim == "floor":
+            out(ins[0])
+        elif prim == "neg":
+            out(Interval(-ins[0].hi, -ins[0].lo))
+        elif prim == "abs":
+            a = ins[0]
+            lo = 0.0 if a.lo <= 0 <= a.hi else min(abs(a.lo), abs(a.hi))
+            out(Interval(lo, max(abs(a.lo), abs(a.hi))))
+        elif prim == "sign":
+            out(Interval(-1, 1))
+        elif prim == "clamp":
+            lo_i, x, hi_i = ins
+            out(Interval(
+                max(x.lo, lo_i.lo) if lo_i.bounded else x.lo,
+                min(x.hi, hi_i.hi) if hi_i.bounded else x.hi,
+            ) if x.lo <= x.hi else x)
+        elif prim == "iota":
+            dim = eqn.params["dimension"]
+            n = eqn.params["shape"][dim]
+            out(Interval(0, max(n - 1, 0)))
+        elif prim in ("argmax", "argmin"):
+            axes = eqn.params.get("axes", ())
+            aval = eqn.invars[0].aval
+            n = 1
+            for ax in axes:
+                n *= aval.shape[ax]
+            out(Interval(0, max(n - 1, 0)))
+        elif prim == "top_k":
+            k_aval = eqn.invars[0].aval
+            n = k_aval.shape[-1]
+            out(ins[0], 0)                           # values
+            out(Interval(0, max(n - 1, 0)), 1)       # indices
+        elif prim in (
+            "broadcast_in_dim", "reshape", "transpose", "squeeze",
+            "expand_dims", "slice", "dynamic_slice", "rev", "copy",
+            "stop_gradient", "reduce_max", "reduce_min", "gather",
+            "sort", "real", "tile", "pad", "dynamic_update_slice",
+            "reduce_or", "reduce_and", "optimization_barrier",
+        ):
+            if prim == "pad":
+                pad_itv = ins[1] if len(ins) > 1 else Interval.const(0)
+                out(ins[0].union(pad_itv))
+            elif prim == "dynamic_update_slice":
+                out(ins[0].union(ins[1]))
+            elif prim == "sort":
+                for i in range(len(outs)):
+                    out(ins[i] if i < len(ins) else Interval.top(), i)
+            else:
+                out(ins[0])
+        elif prim == "concatenate":
+            itv = ins[0]
+            for x in ins[1:]:
+                itv = itv.union(x)
+            out(itv)
+        elif prim == "select_n":
+            itv = ins[1]
+            for x in ins[2:]:
+                itv = itv.union(x)
+            out(itv)
+        elif prim == "reduce_sum":
+            axes = eqn.params.get("axes", ())
+            aval = eqn.invars[0].aval
+            n = 1
+            for ax in axes:
+                n *= aval.shape[ax]
+            a = ins[0]
+            out(Interval(_mul_bound(a.lo, n) if a.lo < 0 else a.lo * n
+                         if a.lo != 0 else 0.0,
+                         _mul_bound(a.hi, n)))
+        elif prim == "convert_element_type":
+            tgt = eqn.params["new_dtype"]
+            if np.issubdtype(tgt, np.integer):
+                info = np.iinfo(tgt)
+                clipped = ins[0].intersect(
+                    Interval(float(info.min), float(info.max))
+                )
+                out(clipped or Interval(float(info.min), float(info.max)))
+            else:
+                out(ins[0])
+        elif prim in ("eq", "ne", "lt", "le", "gt", "ge", "and", "or",
+                      "not", "xor", "is_finite", "reduce_precision"):
+            out(Interval(0, 1))
+        elif prim == "shift_left":
+            a, s = ins
+            if s.bounded and a.bounded and s.lo >= 0:
+                out(Interval(
+                    min(a.lo * 2 ** int(s.lo), a.lo * 2 ** int(s.hi)),
+                    max(a.hi * 2 ** int(s.lo), a.hi * 2 ** int(s.hi)),
+                ))
+            else:
+                out(Interval.top())
+        elif prim in ("shift_right_logical", "shift_right_arithmetic"):
+            a, s = ins
+            if a.lo >= 0 and s.bounded and s.lo >= 0:
+                out(Interval(a.lo // 2 ** int(s.hi), a.hi // 2 ** int(s.lo)))
+            else:
+                out(a if a.bounded else Interval.top())
+        elif prim == "while":
+            self._transfer_while(eqn, ins)
+        elif prim == "scan":
+            self._transfer_scan(eqn, ins)
+        elif prim == "cond":
+            self._transfer_cond(eqn, ins)
+        else:
+            # Call-like primitives (jit/pjit/remat/custom_*): recurse into
+            # the sub-jaxpr generically.
+            inner = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if inner is not None and hasattr(
+                inner.jaxpr if hasattr(inner, "jaxpr") else inner, "eqns"
+            ):
+                sub = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+                n_in = len(sub.invars)
+                results = self._run_subjaxpr(sub, (list(ins) + [
+                    Interval.top()] * n_in)[:n_in])
+                for i, itv in enumerate(results):
+                    out(itv, i)
+            else:
+                # Unknown primitive: sound default.
+                for i in range(len(outs)):
+                    out(Interval.top(), i)
+
+    # -- structured control flow --------------------------------------------
+    def _run_subjaxpr(self, jaxpr, in_itvs: Sequence[Interval]
+                      ) -> List[Interval]:
+        saved = self.env
+        self.env = dict(saved)
+        consts = [Interval.top()] * len(jaxpr.constvars)
+        for v, itv in zip(jaxpr.constvars, consts):
+            self._write(v, itv)
+        for v, itv in zip(jaxpr.invars, in_itvs):
+            self._write(v, itv)
+        for eqn in jaxpr.eqns:
+            self._transfer(eqn)
+        results = [self._read(v) for v in jaxpr.outvars]
+        # surface inner intervals for reporting, then restore scope
+        inner_env = self.env
+        self.env = saved
+        for k, v in inner_env.items():
+            self.env.setdefault(k, v)
+        return results
+
+    def _transfer_scan(self, eqn, ins: Sequence[Interval]) -> None:
+        p = eqn.params
+        body = p["jaxpr"].jaxpr
+        n_consts, n_carry = p["num_consts"], p["num_carry"]
+        consts = list(ins[:n_consts])
+        carry = list(ins[n_consts:n_consts + n_carry])
+        xs = list(ins[n_consts + n_carry:])
+        carry = self._fixpoint(body, consts, carry, xs)
+        results = self._run_subjaxpr(body, consts + carry + xs)
+        ys = results[n_carry:]
+        for i, v in enumerate(eqn.outvars):
+            itv = (carry[i] if i < n_carry else ys[i - n_carry]
+                   if (i - n_carry) < len(ys) else Interval.top())
+            self._write(v, itv)
+
+    def _transfer_while(self, eqn, ins: Sequence[Interval]) -> None:
+        p = eqn.params
+        body = p["body_jaxpr"].jaxpr
+        nb = p["body_nconsts"]
+        nc = p["cond_nconsts"]
+        body_consts = list(ins[nc:nc + nb])
+        carry = list(ins[nc + nb:])
+        carry = self._fixpoint(body, body_consts, carry, [])
+        for v, itv in zip(eqn.outvars, carry):
+            self._write(v, itv)
+
+    def _fixpoint(self, body, consts, carry, xs,
+                  max_iters: int = 8) -> List[Interval]:
+        """Widen-then-narrow loop analysis (same discipline as the CFG
+        analysis in ``repro.core.essa``)."""
+        init = list(carry)
+        for it in range(max_iters):
+            results = self._run_subjaxpr(body, consts + carry + xs)
+            new_carry = results[: len(carry)]
+            merged = [c.union(n) for c, n in zip(carry, new_carry)]
+            if it >= max_iters // 2:                 # start widening late
+                merged = [c.widen(m) for c, m in zip(carry, merged)]
+            if all(m.lo == c.lo and m.hi == c.hi
+                   for m, c in zip(merged, carry)):
+                break
+            carry = merged
+        # Narrowing: re-run the body from the post-widening state; bounds
+        # that the body itself clamps (e.g. min/max) tighten back down.
+        for _ in range(2):
+            results = self._run_subjaxpr(body, consts + carry + xs)
+            carry = [i0.union(n) for i0, n in zip(init, results[:len(carry)])]
+        return carry
+
+    def _transfer_cond(self, eqn, ins: Sequence[Interval]) -> None:
+        branches = eqn.params["branches"]
+        outs: Optional[List[Interval]] = None
+        for br in branches:
+            res = self._run_subjaxpr(br.jaxpr, ins[1:])
+            outs = res if outs is None else [a.union(b)
+                                             for a, b in zip(outs, res)]
+        for v, itv in zip(eqn.outvars, outs or []):
+            self._write(v, itv)
+
+
+@dataclasses.dataclass
+class RangeReport:
+    """Per-value intervals + bitwidths for one traced function."""
+
+    intervals: Dict[str, Interval]
+    out_intervals: List[Interval]
+
+    def bits_for(self, name: str) -> Optional[Tuple[int, bool]]:
+        return self.intervals[name].bits()
+
+    def narrow_values(self, max_bits: int = 16) -> Dict[str, Tuple[int, bool]]:
+        res = {}
+        for name, itv in self.intervals.items():
+            b = itv.bits()
+            if b and b[0] <= max_bits:
+                res[name] = b
+        return res
+
+
+def analyze(fn: Callable, *example_args,
+            input_ranges: Optional[Sequence[Optional[Interval]]] = None
+            ) -> RangeReport:
+    """Trace ``fn`` and run the interval analysis.
+
+    ``input_ranges[i]`` bounds the i-th (flattened) integer argument; pass
+    None for unbounded/float leaves. This metadata plays the role the
+    paper assigns to kernel-launch knowledge (tid bounds etc.).
+    """
+    closed = jax.make_jaxpr(fn)(*example_args)
+    jaxpr = closed.jaxpr
+    ra = RangeAnalysis()
+    flat_ranges = list(input_ranges or [])
+    for i, v in enumerate(jaxpr.invars):
+        itv = flat_ranges[i] if i < len(flat_ranges) else None
+        if itv is None:
+            if _is_int(v.aval):
+                itv = Interval.top()
+            else:
+                itv = Interval.top()
+        ra._write(v, itv)
+    for v in jaxpr.constvars:
+        ra._write(v, Interval.top())
+    for eqn in jaxpr.eqns:
+        ra._transfer(eqn)
+
+    intervals = {}
+    for var, itv in ra.env.items():
+        if hasattr(var, "aval") and _is_int(var.aval):
+            key = str(var)
+            while key in intervals:            # uniquify across sub-scopes
+                key += "'"
+            intervals[key] = itv
+    return RangeReport(
+        intervals=intervals,
+        out_intervals=[ra._read(v) for v in jaxpr.outvars],
+    )

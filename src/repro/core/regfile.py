@@ -1,0 +1,186 @@
+"""Microarchitectural model of the proposed register file (Section 3.2).
+
+Physical storage is a banked array of *warp registers* (32 threads x 32
+bits). Reads go through the indirection table and the **Value Extractor**
+(32 parallel TVEs, each eight 9:1 slice muxes + a pad mux — Fig. 4), then
+integer operands are sign/zero extended and float operands expanded to
+fp32 by the **Value Converter** (Section 3.2.5). Writes run the **Value
+Truncator** (Fig. 5): narrow the float, scatter the slices, and perform a
+masked writeback that only drives the bit lines of the allocated slices.
+
+The slice gather/scatter networks are *statically configured* per kernel
+(the indirection table is loaded before launch), so the mux select logic
+is precomputed on the host from the entry masks — mirroring hardware where
+the selects are driven by the mask bits, not computed per access.
+
+Everything operates on uint32 lanes with jnp so the same code vmaps over
+warps and jits; this module is also the executable oracle for the Pallas
+kernels in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocator import Allocation, IndirectionEntry
+from repro.core.formats import (
+    SLICES_PER_REGISTER,
+    SLICE_BITS,
+    FloatFormat,
+    decode_float,
+    decode_int,
+    encode_float,
+    encode_int,
+    narrowest_at_least,
+)
+
+_U32 = jnp.uint32
+_NIBBLE = np.uint32(0xF)
+
+# Fermi register file geometry (Table 2).
+NUM_BANKS = 16
+ENTRIES_PER_BANK = 64
+BANK_WIDTH_BITS = 1024          # one warp register: 32 threads x 32 bits
+WARP_SIZE = 32
+
+
+def _positions(mask: int) -> List[int]:
+    return [s for s in range(SLICES_PER_REGISTER) if mask & (1 << s)]
+
+
+def extract_slices(word: jnp.ndarray, mask: int, out_base: int) -> jnp.ndarray:
+    """TVE slice gather: route ``mask``'s slices of ``word`` to contiguous
+    output slices starting at ``out_base`` (LSB-first). Pure mux network."""
+    out = jnp.zeros_like(jnp.asarray(word, _U32))
+    for j, pos in enumerate(_positions(mask)):
+        nib = (word >> np.uint32(SLICE_BITS * pos)) & _NIBBLE
+        out = out | (nib << np.uint32(SLICE_BITS * (out_base + j)))
+    return out
+
+
+def scatter_slices(value: jnp.ndarray, mask: int, in_base: int) -> jnp.ndarray:
+    """TVT slice scatter: inverse routing of :func:`extract_slices`."""
+    out = jnp.zeros_like(jnp.asarray(value, _U32))
+    for j, pos in enumerate(_positions(mask)):
+        nib = (value >> np.uint32(SLICE_BITS * (in_base + j))) & _NIBBLE
+        out = out | (nib << np.uint32(SLICE_BITS * pos))
+    return out
+
+
+def mask_bits(mask: int) -> np.uint32:
+    """Bit-lane mask driven during the masked writeback (Section 3.2.6)."""
+    bits = 0
+    for pos in _positions(mask):
+        bits |= 0xF << (SLICE_BITS * pos)
+    return np.uint32(bits)
+
+
+@dataclasses.dataclass
+class PackedRegisterFile:
+    """A warp's packed register file + indirection tables.
+
+    ``storage``: (num_physical_regs, WARP_SIZE) uint32. Separate source and
+    destination indirection tables exist in hardware to avoid contention
+    (Section 3.2.2); they hold identical content, so one ``entries`` dict
+    backs both here while reads/writes are counted per table.
+    """
+
+    allocation: Allocation
+    num_regs: int = 256
+    storage: Optional[jnp.ndarray] = None
+
+    def __post_init__(self):
+        if self.storage is None:
+            self.storage = jnp.zeros((self.num_regs, WARP_SIZE), _U32)
+        self.src_table_reads = 0
+        self.dst_table_reads = 0
+        self.register_fetches = 0       # physical register reads
+        self.double_fetches = 0         # reads that needed two registers
+
+    # -- read path: indirection lookup -> fetch -> TVE -> (VC) -------------
+    def read(self, name: str) -> jnp.ndarray:
+        """Return the architectural register as int32 or float32 lanes."""
+        entry = self.allocation.entries[name]
+        self.src_table_reads += 1
+        code = self._fetch_code(entry)
+        if entry.is_float:
+            fmt = narrowest_at_least(entry.bits)
+            return decode_float(code, fmt)           # Value Converter
+        return decode_int(code, entry.bits, entry.signed)
+
+    def read_raw(self, name: str) -> jnp.ndarray:
+        """Aligned-but-undecoded code (what leaves the Value Extractor)."""
+        return self._fetch_code(self.allocation.entries[name])
+
+    def _fetch_code(self, entry: IndirectionEntry) -> jnp.ndarray:
+        word0 = self.storage[entry.reg0]
+        self.register_fetches += 1
+        part = extract_slices(word0, entry.mask0, 0)
+        if entry.split:
+            self.register_fetches += 1
+            self.double_fetches += 1
+            word1 = self.storage[entry.reg1]
+            n0 = bin(entry.mask0).count("1")
+            # The collector unit's OR gate merges the two fetches (3.2.4).
+            part = part | extract_slices(word1, entry.mask1, n0)
+        return part
+
+    # -- write path: (VT) -> slice scatter -> masked writeback -------------
+    def write(self, name: str, values: jnp.ndarray) -> None:
+        entry = self.allocation.entries[name]
+        self.dst_table_reads += 1
+        if entry.is_float:
+            fmt = narrowest_at_least(entry.bits)
+            code = encode_float(jnp.asarray(values, jnp.float32), fmt)
+        else:
+            code = encode_int(jnp.asarray(values, jnp.int32),
+                              entry.bits, entry.signed)
+
+        storage = self.storage
+        lanes0 = scatter_slices(code, entry.mask0, 0)
+        keep0 = ~mask_bits(entry.mask0)
+        storage = storage.at[entry.reg0].set(
+            (storage[entry.reg0] & keep0) | lanes0
+        )
+        if entry.split:
+            n0 = bin(entry.mask0).count("1")
+            lanes1 = scatter_slices(code, entry.mask1, n0)
+            keep1 = ~mask_bits(entry.mask1)
+            storage = storage.at[entry.reg1].set(
+                (storage[entry.reg1] & keep1) | lanes1
+            )
+        self.storage = storage
+
+    # -- bookkeeping ---------------------------------------------------------
+    def bank_of(self, reg: int) -> int:
+        return reg % NUM_BANKS
+
+    @property
+    def double_fetch_rate(self) -> float:
+        return self.double_fetches / max(self.register_fetches, 1)
+
+
+def baseline_register_file(num_regs: int = 256) -> "PackedRegisterFile":
+    """A conventional 32-bit-granularity RF expressed in the same model:
+    every architectural register owns all 8 slices of one physical reg."""
+    from repro.core.allocator import Allocation, IndirectionEntry
+
+    entries = {
+        f"r{i}": IndirectionEntry(
+            name=f"r{i}", reg0=i, mask0=0xFF, is_float=False, signed=True,
+            bits=32,
+        )
+        for i in range(num_regs)
+    }
+    alloc = Allocation(
+        entries=entries,
+        register_pressure=num_regs,
+        registers_used=num_regs,
+        total_slices=num_regs * SLICES_PER_REGISTER,
+        baseline_pressure=num_regs,
+        split_count=0,
+    )
+    return PackedRegisterFile(allocation=alloc, num_regs=num_regs)

@@ -1,0 +1,167 @@
+"""PackedTensor / PackedStore: the register file at tensor granularity.
+
+A ``PackedTensor`` is the framework's architectural-register analogue: a
+logical float or integer tensor stored as a dense uint32 bitstream in the
+group-of-32 layout of ``repro.core.bitpack`` with a statically assigned
+bitwidth (from precision tuning / range analysis). It is a pytree node, so
+packed state flows through jit/pjit/grad machinery and can be sharded;
+the packed (last) axis shards evenly whenever the logical axis length is a
+multiple of 32 x shard-count.
+
+A ``PackedStore`` is the indirection table analogue for a whole state
+pytree: per-leaf format metadata + packed payloads, with helpers to pack /
+unpack / estimate footprints. Packing policy (which leaves get which
+width) comes from the static analysis framework (``repro.core.compress``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack
+from repro.core.formats import (
+    FLOAT_FORMATS,
+    FloatFormat,
+    decode_float,
+    decode_int,
+    encode_float,
+    encode_int,
+)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedTensor:
+    """A tensor packed along its last axis at ``bits`` per element."""
+
+    data: jnp.ndarray                # uint32 (..., groups*bits)
+    bits: int                        # total bits per element (mult of 4)
+    kind: str                        # "float" | "int"
+    signed: bool                     # int decode extension mode
+    logical_shape: Tuple[int, ...]   # unpacked shape (pack axis last)
+    out_dtype: Any                   # dtype returned by unpack()
+
+    def tree_flatten(self):
+        return (self.data,), (
+            self.bits, self.kind, self.signed, self.logical_shape,
+            self.out_dtype,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    # -- the Value Extractor + Converter path --------------------------------
+    def unpack(self) -> jnp.ndarray:
+        n = self.logical_shape[-1]
+        codes = bitpack.unpack_groups(self.data, self.bits, n)
+        if self.kind == "float":
+            fmt = FLOAT_FORMATS[self.bits]
+            x = decode_float(codes, fmt)
+            out = x.astype(self.out_dtype)
+        else:
+            out = decode_int(codes, self.bits, self.signed).astype(
+                self.out_dtype
+            )
+        return out.reshape(self.logical_shape)
+
+    @property
+    def nbytes_packed(self) -> int:
+        return int(np.prod(self.data.shape)) * 4
+
+    @property
+    def nbytes_logical_f32(self) -> int:
+        return int(np.prod(self.logical_shape)) * 4
+
+    @property
+    def compression_ratio(self) -> float:
+        return 32.0 / self.bits
+
+
+# -- the Value Truncator path -------------------------------------------------
+def pack_tensor(
+    x: jnp.ndarray,
+    bits: int,
+    kind: Optional[str] = None,
+    signed: bool = True,
+    out_dtype: Optional[Any] = None,
+) -> PackedTensor:
+    x = jnp.asarray(x)
+    if kind is None:
+        kind = "float" if np.issubdtype(x.dtype, np.floating) else "int"
+    out_dtype = out_dtype or x.dtype
+    if kind == "float":
+        codes = encode_float(x.astype(jnp.float32), FLOAT_FORMATS[bits])
+    else:
+        codes = encode_int(x.astype(jnp.int32), bits, signed)
+    data = bitpack.pack_groups(codes, bits)
+    return PackedTensor(
+        data=data,
+        bits=bits,
+        kind=kind,
+        signed=signed,
+        logical_shape=tuple(x.shape),
+        out_dtype=out_dtype,
+    )
+
+
+def packed_shape(shape: Tuple[int, ...], bits: int) -> Tuple[int, ...]:
+    """Shape of the packed payload for a logical ``shape`` at ``bits``."""
+    return tuple(shape[:-1]) + (bitpack.packed_group_words(shape[-1], bits),)
+
+
+def packed_spec(shape: Tuple[int, ...], bits: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(packed_shape(shape, bits), jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Store-level helpers (pytrees of PackedTensor / plain arrays)
+# ---------------------------------------------------------------------------
+
+def is_packed(x) -> bool:
+    return isinstance(x, PackedTensor)
+
+
+def pack_tree(
+    tree: Any,
+    bits_of: Callable[[Tuple[Any, ...], jnp.ndarray], Optional[int]],
+) -> Any:
+    """Pack every leaf for which ``bits_of(path, leaf)`` returns a width;
+    leaves mapped to None stay unpacked (e.g. norms, small biases)."""
+
+    def _maybe_pack(path, leaf):
+        bits = bits_of(path, leaf)
+        if bits is None or bits >= 32:
+            return leaf
+        return pack_tensor(leaf, bits)
+
+    return jax.tree_util.tree_map_with_path(_maybe_pack, tree)
+
+
+def unpack_tree(tree: Any) -> Any:
+    """Unpack every PackedTensor leaf (identity on plain arrays)."""
+    return jax.tree_util.tree_map(
+        lambda l: l.unpack() if is_packed(l) else l,
+        tree,
+        is_leaf=is_packed,
+    )
+
+
+def tree_bytes(tree: Any) -> Tuple[int, int]:
+    """(packed_bytes, logical_f32_bytes) over a (partially) packed tree."""
+    packed = 0
+    logical = 0
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=is_packed):
+        if is_packed(leaf):
+            packed += leaf.nbytes_packed
+            logical += leaf.nbytes_logical_f32
+        else:
+            n = int(np.prod(leaf.shape)) if hasattr(leaf, "shape") else 0
+            b = n * np.dtype(leaf.dtype).itemsize
+            packed += b
+            logical += n * 4
+    return packed, logical

@@ -1,0 +1,173 @@
+"""Sharding rules: logical axis names -> mesh PartitionSpecs.
+
+The production mesh axes are ("data", "model") single-pod and
+("pod", "data", "model") multi-pod; data-parallel state shards over
+("pod", "data") jointly. Rules map parameter-path regexes to specs, so the
+same model code serves TP (replicated weights across DP) and ZeRO
+(weights sharded over DP) modes. ``constrain`` is a mesh-aware
+``with_sharding_constraint`` that degrades to a no-op outside jit/mesh.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DATA_AXES = ("pod", "data")        # DP shards over both when present
+
+
+def _mesh_axis_names() -> Tuple[str, ...]:
+    env = jax.sharding.get_abstract_mesh()
+    if env is not None and env.axis_names:
+        return tuple(env.axis_names)
+    # legacy `with mesh:` context (what the launcher uses)
+    from jax._src.mesh import thread_resources
+    phys = thread_resources.env.physical_mesh
+    if not phys.empty:
+        return tuple(phys.axis_names)
+    return ()
+
+
+def resolve_axes(axes: Sequence[Any]) -> P:
+    """Translate logical axis entries to a PartitionSpec valid for the
+    current mesh: "data" expands to ("pod", "data") on multi-pod meshes;
+    axis names absent from the mesh drop to None (replicated)."""
+    names = _mesh_axis_names()
+    out = []
+    for ax in axes:
+        if ax is None:
+            out.append(None)
+        elif ax == "data":
+            present = tuple(a for a in DATA_AXES if a in names)
+            out.append(present if present else None)
+        elif isinstance(ax, (tuple, list)):
+            present = tuple(a for a in ax if a in names)
+            out.append(present if present else None)
+        else:
+            out.append(ax if ax in names else None)
+    return P(*out)
+
+
+def _axis_sizes() -> dict:
+    env = jax.sharding.get_abstract_mesh()
+    if env is not None and env.axis_names:
+        return dict(zip(env.axis_names, env.axis_sizes))
+    from jax._src.mesh import thread_resources
+    phys = thread_resources.env.physical_mesh
+    if not phys.empty:
+        return dict(zip(phys.axis_names, phys.devices.shape))
+    return {}
+
+
+def drop_indivisible(spec: P, shape: Tuple[int, ...]) -> P:
+    """Replicate any dimension whose size doesn't divide its shard count —
+    jit in_shardings (unlike sharding constraints) reject uneven shards.
+    The fallbacks are always small tensors (odd vocabs, batch=1 decode)."""
+    sizes = _axis_sizes()
+    out = []
+    for dim, ax in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        shards = 1
+        for n in names:
+            shards *= sizes.get(n, 1)
+        out.append(ax if shape[dim] % shards == 0 else None)
+    return P(*out)
+
+
+def constrain(x, axes: Sequence[Any]):
+    """with_sharding_constraint against logical axes; no-op if no mesh."""
+    names = _mesh_axis_names()
+    if not names:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, resolve_axes(axes))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules
+# ---------------------------------------------------------------------------
+# Pattern -> logical axes per dimension, aligned to the *trailing*
+# dimensions of the parameter (so stacked (L, ...) scan params reuse the
+# rules of their unstacked forms; leading unmatched dims are replicated,
+# or sharded over DP in zero mode).
+#
+# Packed weights: PackedTensor payloads have the same rank with the last
+# axis scaled by bits/32 — the rules apply unchanged because sharding of
+# a group-aligned packed axis is proportional.
+
+TP_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+    # attention projections: shard heads/ff over model
+    (r"\bwq\b", (None, "model")),          # (d, H*hd)
+    (r"\bwk\b", (None, "model")),
+    (r"\bwv\b", (None, "model")),
+    (r"\bwo\b", ("model", None)),          # (H*hd, d)
+    # MLPs: column- then row-parallel
+    (r"\bw_in\b|\bw_gate\b", (None, "model")),
+    (r"\bw_out\b", ("model", None)),
+    # MoE experts: expert-parallel over model
+    (r"\bexperts\b.*\b(w_in|w_gate)\b", ("model", None, None)),
+    (r"\bexperts\b.*\bw_out\b", ("model", None, None)),
+    (r"\brouter\b", (None, None)),
+    # embeddings: vocab over model
+    (r"\bembed\b", ("model", None)),
+    (r"\blm_head\b", (None, "model")),
+    # mamba / rglru projections
+    (r"\bin_proj\b", (None, "model")),
+    (r"\bout_proj\b", ("model", None)),
+    (r"\bconv_w\b", ("model", None)),
+    (r"\bx_proj\b", ("model", None)),
+    (r"\bdt_proj\b", (None, "model")),
+    (r"\ba_param\b", ("model", None)),
+    (r"\b(dt_bias|conv_b|d_param)\b", ("model",)),
+    (r"\brg_(a|wr|wi)\b", ("model",)),
+    (r"\brg_(gate_w|in_w)\b", (None, "model")),
+    (r"\brg_out\b", ("model", None)),
+    # norms / small vectors: replicated
+    (r"\b(norm|scale|bias|ln)\w*\b", (None,)),
+)
+
+
+def spec_for(path: str, shape: Tuple[int, ...], mode: str = "tp",
+             packed: bool = False) -> P:
+    """PartitionSpec for a parameter path under the given mode."""
+    axes: Optional[Tuple[Any, ...]] = None
+    for pat, a in TP_RULES:
+        if re.search(pat, path):
+            axes = a
+            break
+    rank = len(shape)
+    if axes is None:
+        spec = [None] * rank
+    else:
+        spec = [None] * (rank - len(axes)) + list(axes)[:rank]
+    if mode == "zero":
+        # ZeRO: additionally shard a free dim over DP — the first dim the
+        # DP degree divides (the layer stack when L divides, else e.g.
+        # the expert dim: arctic's L=35 doesn't divide 16 but E=128 does).
+        sizes = _axis_sizes()
+        dp = 1
+        for a in DATA_AXES:
+            dp *= sizes.get(a, 1)
+        for d in range(rank):
+            if spec[d] is None and dp > 1 and shape[d] % dp == 0 \
+                    and shape[d] >= dp:
+                spec[d] = "data"
+                break
+    return drop_indivisible(resolve_axes(spec), shape)
+
+
+def shard_leaf(path: str, leaf, mesh: Mesh, mode: str = "tp"):
+    """NamedSharding for one (possibly packed) parameter leaf."""
+    from repro.core.tensor_store import PackedTensor
+    if isinstance(leaf, PackedTensor):
+        shape = leaf.data.shape
+        return NamedSharding(mesh, spec_for(path, shape, mode, packed=True))
+    return NamedSharding(mesh, spec_for(path, leaf.shape, mode))

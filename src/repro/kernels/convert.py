@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: the standalone Value Converter / Truncator lanes.
+
+The paper's VC expands six warp-operands of narrow floats to fp32 per
+cycle (Section 3.2.5); its VT narrows them back before writeback. Here the
+same conversions run as elementwise VPU kernels over code lanes — used
+when codes are already aligned (e.g. staged collectives that all-gather
+code lanes before local decode) as opposed to the fused unpack path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import FLOAT_FORMATS, decode_float, encode_float
+
+DEFAULT_BLOCK = (256, 512)
+
+
+def _convert_kernel(c_ref, o_ref, *, bits: int):
+    o_ref[...] = decode_float(c_ref[...], FLOAT_FORMATS[bits])
+
+
+def _truncate_kernel(x_ref, o_ref, *, bits: int):
+    o_ref[...] = encode_float(x_ref[...].astype(jnp.float32),
+                              FLOAT_FORMATS[bits])
+
+
+def _elementwise_call(kernel, x, out_dtype, block, interpret):
+    rows, cols = x.shape
+    br = min(block[0], rows)
+    bc = min(block[1], cols)
+    assert rows % br == 0 and cols % bc == 0
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br, cols // bc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), out_dtype),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def convert(code: jnp.ndarray, bits: int, block=DEFAULT_BLOCK,
+            interpret: bool = True) -> jnp.ndarray:
+    """Narrow-float code lanes (2-D uint32) -> f32 lanes."""
+    assert code.ndim == 2
+    return _elementwise_call(
+        functools.partial(_convert_kernel, bits=bits),
+        code, jnp.float32, block, interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def truncate(x: jnp.ndarray, bits: int, block=DEFAULT_BLOCK,
+             interpret: bool = True) -> jnp.ndarray:
+    """f32 lanes (2-D) -> narrow-float code lanes (uint32)."""
+    assert x.ndim == 2
+    return _elementwise_call(
+        functools.partial(_truncate_kernel, bits=bits),
+        x, jnp.uint32, block, interpret,
+    )

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: single-token attention decode over a packed KV cache.
+
+Decode is the workload where the paper's occupancy argument lands on TPU:
+step time is dominated by streaming the KV cache from HBM, so packing KV
+at the statically tuned width cuts the dominant roofline term by bits/32
+*and* lets proportionally more sequences stay resident (serving
+"occupancy", see core/occupancy.decode_residency).
+
+One grid step processes one (batch, kv-head) pair and one sequence chunk:
+K/V chunks are unpacked in VMEM (Value Extractor path), the chunk's
+contribution to the online softmax is accumulated in f32 VMEM scratch
+(running max / normalizer / weighted values — flash-decoding style), and
+the final grid step normalizes and writes the (group, D) output tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bitpack
+from repro.core.formats import FLOAT_FORMATS, decode_float
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _kv_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_ref, l_ref, acc_ref,
+                      *, bits: int, d: int, block_s: int, s_steps: int):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # (G, D)
+    k_codes = bitpack.unpack_groups(k_ref[0, 0], bits, d)  # (S_blk, D)
+    k = decode_float(k_codes, FLOAT_FORMATS[bits])
+    v_codes = bitpack.unpack_groups(v_ref[0, 0], bits, d)
+    v = decode_float(v_codes, FLOAT_FORMATS[bits])
+
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    logits = logits * (1.0 / (d ** 0.5))                  # (G, S_blk)
+
+    # mask beyond the sequence's valid length
+    base = s_idx * block_s
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    valid = pos < len_ref[0]
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (G, 1)
+    m_new = jnp.maximum(m_prev, logits.max(-1, keepdims=True))
+    scale = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                           # (G, S_blk)
+    l_ref[...] = l_ref[...] * scale + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * scale + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == s_steps - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "d", "block_s", "interpret"),
+)
+def kv_decode(
+    q: jnp.ndarray,            # (B, H, D)
+    k_packed: jnp.ndarray,     # (B, S, Hkv, D*bits/32) uint32
+    v_packed: jnp.ndarray,     # (B, S, Hkv, D*bits/32) uint32
+    kv_len: jnp.ndarray,       # (B,) int32 valid lengths
+    bits: int,
+    d: int,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, h, dim = q.shape
+    s, hkv = k_packed.shape[1], k_packed.shape[2]
+    group = h // hkv
+    block_s = min(block_s, s)
+    assert s % block_s == 0
+    s_steps = s // block_s
+    dw = dim // 32 * bits
+
+    # (B, Hkv, G, D) view of q so one grid step owns one kv head's group.
+    qg = q.reshape(b, hkv, group, dim)
+    # (B, Hkv, S, Dw) views of the packed caches.
+    kp = jnp.swapaxes(k_packed, 1, 2)
+    vp = jnp.swapaxes(v_packed, 1, 2)
+
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        scratch = [
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, dim), jnp.float32),
+        ]
+    except ImportError:  # pragma: no cover
+        scratch = []
+
+    grid = (b, hkv, s_steps)
+    out = pl.pallas_call(
+        functools.partial(
+            _kv_decode_kernel, bits=bits, d=dim, block_s=block_s,
+            s_steps=s_steps,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, js: (ib,)),
+            pl.BlockSpec((1, 1, group, dim), lambda ib, ih, js: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, dw), lambda ib, ih, js: (ib, ih, js, 0)),
+            pl.BlockSpec((1, 1, block_s, dw), lambda ib, ih, js: (ib, ih, js, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dim),
+                               lambda ib, ih, js: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, dim), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(kv_len, qg, kp, vp)
+    return out.reshape(b, h, dim)

@@ -1,0 +1,70 @@
+"""Unified kernel dispatch: Pallas TPU kernels vs. the jnp reference path.
+
+Models call these wrappers; a single ``KernelBackend`` switch selects
+between the fused Pallas kernels (TPU, or interpret-mode validation) and
+the pure-jnp oracle (used for the multi-device dry-run, where XLA lowers
+the same bit arithmetic on any backend). The numerics are identical by
+construction — the kernels reuse the oracle's bit manipulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBackend:
+    """``mode``: "jnp" (XLA everywhere), "pallas_interpret" (CPU
+    validation), or "pallas" (real TPU)."""
+
+    mode: str = "jnp"
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.mode in ("pallas", "pallas_interpret")
+
+    @property
+    def interpret(self) -> bool:
+        return self.mode != "pallas"
+
+
+BACKEND = KernelBackend()
+
+
+def set_backend(mode: str) -> None:
+    global BACKEND
+    BACKEND = KernelBackend(mode)
+
+
+def unpack(packed, bits: int, n: int, out_dtype=jnp.float32):
+    if BACKEND.use_pallas and packed.ndim == 2:
+        from repro.kernels.unpack import unpack as _k
+        return _k(packed, bits, n, out_dtype, interpret=BACKEND.interpret)
+    return _ref.unpack_ref(packed, bits, n, out_dtype)
+
+
+def pack(x, bits: int):
+    if BACKEND.use_pallas and x.ndim == 2:
+        from repro.kernels.pack import pack as _k
+        return _k(x, bits, interpret=BACKEND.interpret)
+    return _ref.pack_ref(x, bits)
+
+
+def packed_matmul(x, w_packed, bits: int, n: int):
+    if BACKEND.use_pallas and x.ndim == 2:
+        from repro.kernels.packed_matmul import packed_matmul as _k
+        return _k(x, w_packed, bits, n, interpret=BACKEND.interpret)
+    return _ref.packed_matmul_ref(x, w_packed, bits, n)
+
+
+def kv_decode(q, k_packed, v_packed, kv_len, bits: int, d: int):
+    if BACKEND.use_pallas:
+        from repro.kernels.kv_decode import kv_decode as _k
+        return _k(q, k_packed, v_packed, kv_len, bits, d,
+                  interpret=BACKEND.interpret)
+    return _ref.kv_decode_ref(q, k_packed, v_packed, bits, d, kv_len)

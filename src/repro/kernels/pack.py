@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: the Value Truncator write path (Fig. 5).
+
+f32/bf16 tiles are narrowed to the assigned Table 3 format (step 1, RNE
+with inf/NaN preservation) and scattered into group-of-32 packed words
+(step 2's slice placement). The masked writeback of Section 3.2.6 is
+implicit: each tile owns whole words, so no read-modify-write is needed —
+the TPU adaptation chooses group-aligned tiles precisely to avoid the
+bank-conflict buffering the paper spends Section 6.3 on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bitpack
+from repro.core.formats import FLOAT_FORMATS, encode_float
+
+DEFAULT_BLOCK_ROWS = 256
+DEFAULT_BLOCK_CODES = 512
+
+
+def _pack_kernel(x_ref, o_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.float32)
+    codes = encode_float(x, FLOAT_FORMATS[bits])
+    o_ref[...] = bitpack.pack_groups(codes, bits)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "block_rows", "block_codes",
+                              "interpret")
+)
+def pack(
+    x: jnp.ndarray,
+    bits: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_codes: int = DEFAULT_BLOCK_CODES,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pack (R, N) floats -> (R, N*bits/32) uint32 words. 2-D input."""
+    assert x.ndim == 2, "flatten leading dims before calling"
+    rows, n = x.shape
+    assert n % bitpack.GROUP == 0, "pad codes to a multiple of 32"
+    block_codes = min(block_codes, n)
+    assert n % block_codes == 0 and block_codes % bitpack.GROUP == 0
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0
+    words_blk = block_codes // 32 * bits
+
+    grid = (rows // block_rows, n // block_codes)
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, block_codes),
+                               lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_rows, words_blk),
+                               lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, n // 32 * bits), jnp.uint32),
+        interpret=interpret,
+    )(x)

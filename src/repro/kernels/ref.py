@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the executable specifications: each kernel's test sweeps shapes,
+dtypes and Table 3 widths and asserts allclose (or exact equality for the
+bit-manipulation paths) against these functions.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.core.formats import FLOAT_FORMATS, decode_float, encode_float
+
+
+def unpack_ref(packed: jnp.ndarray, bits: int, n: int,
+               out_dtype=jnp.float32) -> jnp.ndarray:
+    """Value Extractor + Converter: packed words -> floats (last axis n)."""
+    codes = bitpack.unpack_groups(packed, bits, n)
+    return decode_float(codes, FLOAT_FORMATS[bits]).astype(out_dtype)
+
+
+def pack_ref(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Value Truncator: floats -> packed words along the last axis."""
+    codes = encode_float(jnp.asarray(x, jnp.float32), FLOAT_FORMATS[bits])
+    return bitpack.pack_groups(codes, bits)
+
+
+def convert_ref(code: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Value Converter: one narrow-float code lane -> f32 lane."""
+    return decode_float(code, FLOAT_FORMATS[bits])
+
+
+def truncate_ref(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Truncation step of the Value Truncator: f32 lane -> code lane."""
+    return encode_float(jnp.asarray(x, jnp.float32), FLOAT_FORMATS[bits])
+
+
+def packed_matmul_ref(x: jnp.ndarray, w_packed: jnp.ndarray, bits: int,
+                      n: int) -> jnp.ndarray:
+    """x @ unpack(w): x (M, K) f32/bf16, w_packed (K, n*bits/32) uint32."""
+    w = unpack_ref(w_packed, bits, n, jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32)
+
+
+def kv_decode_ref(
+    q: jnp.ndarray,           # (B, H, D)
+    k_packed: jnp.ndarray,    # (B, S, Hkv, D*bits/32) uint32
+    v_packed: jnp.ndarray,    # (B, S, Hkv, D*bits/32) uint32
+    bits: int,
+    d: int,
+    kv_len: jnp.ndarray | None = None,   # (B,) valid lengths, else full S
+) -> jnp.ndarray:
+    """Single-token attention decode over a packed KV cache."""
+    b, h, dim = q.shape
+    s = k_packed.shape[1]
+    hkv = k_packed.shape[2]
+    group = h // hkv
+    k = unpack_ref(k_packed, bits, d)                   # (B, S, Hkv, D)
+    v = unpack_ref(v_packed, bits, d)
+    qg = q.reshape(b, hkv, group, dim).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k) / jnp.sqrt(float(dim))
+    if kv_len is not None:
+        mask = jnp.arange(s)[None, None, None, :] < kv_len[:, None, None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return out.reshape(b, h, dim).astype(q.dtype)

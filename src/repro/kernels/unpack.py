@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: the Value Extractor + Converter read path.
+
+Streams group-of-32 packed words HBM->VMEM in (rows x words) tiles and
+emits decoded f32/bf16 tiles. The slice gather collapses to the static
+shift/or network of ``bitpack.unpack_groups`` (the mask-driven 9:1 muxes of
+Fig. 4) and the float expansion is ``formats.decode_float`` (the TVC of
+Section 3.2.5) — identical bit arithmetic to the oracle, tiled for VMEM.
+
+Tile geometry: the packed last dim is tiled in multiples of ``bits`` words
+(= one group of 32 codes) so every tile is self-contained; lane width 128
+on the code side means tiles of ``4*bits`` packed words ( >=128 lanes )
+keep the VPU busy. Rows tile at 8/16/32 sublanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bitpack
+from repro.core.formats import FLOAT_FORMATS, decode_float
+
+DEFAULT_BLOCK_ROWS = 256
+DEFAULT_BLOCK_CODES = 512            # codes per tile along the last axis
+
+
+def _unpack_kernel(p_ref, o_ref, *, bits: int, out_dtype):
+    words = p_ref[...]
+    n_codes = o_ref.shape[-1]
+    codes = bitpack.unpack_groups(words, bits, n_codes)
+    o_ref[...] = decode_float(codes, FLOAT_FORMATS[bits]).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "n", "out_dtype", "block_rows",
+                              "block_codes", "interpret")
+)
+def unpack(
+    packed: jnp.ndarray,
+    bits: int,
+    n: int,
+    out_dtype=jnp.float32,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_codes: int = DEFAULT_BLOCK_CODES,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Unpack (R, n*bits/32) uint32 -> (R, n) floats. 2-D input.
+
+    ``interpret=True`` runs the kernel body in Python (CPU validation);
+    on TPU pass interpret=False.
+    """
+    assert packed.ndim == 2, "flatten leading dims before calling"
+    rows = packed.shape[0]
+    assert n % bitpack.GROUP == 0, "pad codes to a multiple of 32"
+    block_codes = min(block_codes, n)
+    assert n % block_codes == 0 and block_codes % bitpack.GROUP == 0
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0
+    words_blk = block_codes // 32 * bits
+
+    grid = (rows // block_rows, n // block_codes)
+    return pl.pallas_call(
+        functools.partial(_unpack_kernel, bits=bits, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, words_blk),
+                               lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_rows, block_codes),
+                               lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), out_dtype),
+        interpret=interpret,
+    )(packed)

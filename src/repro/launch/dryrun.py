@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each
+cell we ``jit(step).lower(ShapeDtypeStructs).compile()`` on the 16x16
+production mesh and the 2x16x16 multi-pod mesh, then record
+``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()`` (FLOPs /
+bytes for the roofline), and the collective-byte census parsed from the
+compiled HLO.
+
+Usage:
+    python -m repro.launch.dryrun                      # all cells
+    python -m repro.launch.dryrun --arch qwen3_8b --shape decode_32k
+    python -m repro.launch.dryrun --multi-pod          # 512-chip mesh
+    python -m repro.launch.dryrun --mode zero          # DP-sharded state
+
+Results are appended as JSON lines under benchmarks/results/dryrun/.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.launch.hlo_census import count_ops, hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_programs
+from repro.models.config import ALL_SHAPES
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results",
+    "dryrun",
+)
+
+
+def cell_skip_reason(cfg, shape) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full attention: 512k softmax decode excluded by "
+                "design (DESIGN.md section 6)")
+    return None
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             mode: str = "tp", compression: bool = True,
+             kv_bits: int = None) -> dict:
+    import dataclasses
+    from repro.models.config import NO_COMPRESSION
+    cfg = get_config(arch)
+    if not compression:
+        cfg = dataclasses.replace(cfg, compression=NO_COMPRESSION)
+    if kv_bits:
+        cfg = dataclasses.replace(
+            cfg, compression=dataclasses.replace(
+                cfg.compression, kv_bits=kv_bits))
+    shape = next(s for s in ALL_SHAPES if s.name == shape_name)
+    reason = cell_skip_reason(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mode": mode,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "compression": compression,
+    }
+    if reason:
+        rec.update(status="SKIP", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        prog = build_programs(cfg, shape, mesh, mode=mode)
+        lowered = prog.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    census = hlo_cost(hlo)
+    n_dev = mesh.devices.size
+    rec.update(
+        status="OK",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        devices=n_dev,
+        # trip-weighted static census (cost_analysis counts while bodies
+        # once; see hlo_census docstring) — per device per step
+        flops=census["flops"],
+        bytes_accessed=census["bytes"],
+        xla_cost_flops=float(cost.get("flops", 0.0)),
+        xla_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+        collectives=census["collectives"],
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        ops=count_ops(hlo),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None, help="one shape (default all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--mode", default="tp", choices=["tp", "zero"])
+    ap.add_argument("--no-compression", action="store_true",
+                    help="paper-baseline: strip all packing from the config")
+    ap.add_argument("--kv-bits", type=int, default=None,
+                    help="override the KV-cache packing width")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else [a for a in ARCHS
+                                           if a != "paper_native"]
+    shapes = ([args.shape] if args.shape
+              else [s.name for s in ALL_SHAPES])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = args.out or os.path.join(RESULTS_DIR, "cells.jsonl")
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape, mp, args.mode,
+                                   compression=not args.no_compression,
+                                   kv_bits=args.kv_bits)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    rec = {
+                        "arch": arch, "shape": shape, "mode": args.mode,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "FAIL",
+                        "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                    failures += 1
+                with open(out_path, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                status = rec["status"]
+                extra = ""
+                if status == "OK":
+                    extra = (
+                        f"flops={rec['flops']:.3e} "
+                        f"bytes={rec['bytes_accessed']:.3e} "
+                        f"coll={rec['collectives']['total_bytes']:.3e}B "
+                        f"({rec['compile_s']}s)"
+                    )
+                elif status == "FAIL":
+                    extra = rec["error"][:160]
+                print(f"[{status}] {tag} {extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

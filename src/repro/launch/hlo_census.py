@@ -1,0 +1,347 @@
+"""Static cost model over compiled HLO text (the dry-run "profiler").
+
+``compiled.cost_analysis()`` counts every ``while`` body **once** (verified
+in tests), which under-reports scan-over-layers programs by ~L x. This
+module re-derives the roofline inputs by walking the computation graph
+with **trip-count weighting** (XLA records ``known_trip_count`` in each
+while's backend config):
+
+  * ``flops``       — 2*M*N*K summed over every ``dot`` (and dots inside
+                      fusion bodies), the dominant compute;
+  * ``bytes``       — per top-level instruction: operand + output bytes
+                      (post-fusion instructions are the HBM-traffic
+                      boundary; fusion internals move no HBM bytes);
+  * ``collectives`` — operand bytes of every all-gather / all-reduce /
+                      reduce-scatter / all-to-all / collective-permute,
+                      bucketed by kind.
+
+All values are **per device per step** (the compiled module is the SPMD
+per-device program). Multiply by device count for fleet totals.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(
+    r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128"
+    r"|f8e4m3|f8e5m2)\[([0-9,]*)\]"
+)
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(([^)]*)\)"
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_WHILE_RE = re.compile(r"\bwhile\(")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count..\{.n.:.(\d+).')
+_FUSION_CALL_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CALL_RE = re.compile(r"\bcall\(")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_DOT_RE = re.compile(r"\bdot\(")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_NO_TRAFFIC_OPS = re.compile(
+    r"\b(parameter|constant|tuple|get-tuple-element|bitcast|"
+    r"after-all|iota)\("
+)
+
+
+def _parse_dims(rhs: str) -> Tuple[int, List[List[int]]]:
+    """(total bytes, list of dim-lists) for a definition's type prefix."""
+    call = re.search(r"[a-z][\w\-]*\(", rhs)
+    prefix = rhs[: call.start()] if call else rhs
+    total = 0
+    shapes = []
+    for m in _SHAPE_RE.finditer(prefix):
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[m.group(1)]
+        shapes.append(dims)
+    return total, shapes
+
+
+def build_shape_map(hlo_text: str) -> Dict[str, Tuple[int, List[List[int]]]]:
+    out: Dict[str, Tuple[int, List[List[int]]]] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        b, shapes = _parse_dims(m.group(2))
+        if b:
+            out[m.group(1)] = (b, shapes)
+    return out
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        is_hdr = (
+            not line.startswith(" ")
+            and line.rstrip().endswith("{")
+            and _COMP_HDR_RE.match(line.strip())
+        )
+        if is_hdr:
+            cur = _COMP_HDR_RE.match(line.strip()).group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+            if line.strip() == "}":
+                cur = None
+    return comps
+
+
+def _entry_name(hlo_text: str) -> Optional[str]:
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.replace("ENTRY", "").strip())
+            return m.group(1) if m else None
+    return None
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.sizes = build_shape_map(hlo_text)
+        self.comps = _split_computations(hlo_text)
+        self.entry = _entry_name(hlo_text)
+        self._memo: Dict[Tuple[str, bool], Dict] = {}
+        self.coll_counts: Dict[str, int] = defaultdict(int)
+        self._sliced_params: Dict[str, Dict[int, float]] = {}
+        for name in self.comps:
+            self._sliced_params[name] = self._find_sliced_params(name)
+
+    def _find_sliced_params(self, comp: str) -> Dict[int, float]:
+        """Parameters of a fusion that are only read through a
+        dynamic-slice/gather: the fusion touches just the sliced window,
+        not the whole operand (the scan-over-stacked-weights pattern).
+        Returns param_index -> bytes actually read."""
+        param_name_to_idx: Dict[str, int] = {}
+        uses: Dict[str, List[str]] = defaultdict(list)
+        slice_bytes: Dict[str, float] = {}
+        for line in self.comps[comp]:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            rhs = dm.group(2)
+            pm = re.search(r"parameter\((\d+)\)", rhs)
+            if pm:
+                param_name_to_idx[dm.group(1)] = int(pm.group(1))
+                continue
+            call = re.search(r"([a-z][\w\-]*)\(([^)]*)\)", rhs)
+            if not call:
+                continue
+            op_kind = call.group(1)
+            for om in _OPERAND_RE.finditer(call.group(2)):
+                uses[om.group(1)].append(op_kind)
+            if op_kind in ("dynamic-slice", "gather"):
+                first = _OPERAND_RE.search(call.group(2))
+                if first:
+                    out_b, _ = _parse_dims(rhs)
+                    slice_bytes[first.group(1)] = (
+                        slice_bytes.get(first.group(1), 0.0) + out_b)
+        out: Dict[int, float] = {}
+        for pname, idx in param_name_to_idx.items():
+            kinds = uses.get(pname, [])
+            if kinds and all(k in ("dynamic-slice", "gather")
+                             for k in kinds):
+                out[idx] = slice_bytes.get(pname, 0.0)
+        return out
+
+    def _dot_flops(self, line: str) -> float:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            return 0.0
+        _, out_shapes = _parse_dims(dm.group(2))
+        out_n = 1
+        for d in (out_shapes[0] if out_shapes else []):
+            out_n *= d
+        ops = _OPERAND_RE.findall(line.split("dot(", 1)[1])
+        lhs = self.sizes.get(ops[0]) if ops else None
+        cm = _LHS_C_RE.search(line)
+        k = 1
+        if lhs and cm and cm.group(1):
+            dims = lhs[1][0] if lhs[1] else []
+            for ci in cm.group(1).split(","):
+                ci = int(ci)
+                if ci < len(dims):
+                    k *= dims[ci]
+        return 2.0 * out_n * k
+
+    def _line_bytes(self, line: str) -> float:
+        if _NO_TRAFFIC_OPS.search(line):
+            return 0.0
+        # copies of loop-carried state are CPU aliasing artifacts; TPU
+        # buffer assignment updates donated/carried buffers in place.
+        if re.search(r"\bcopy\(", line):
+            return 0.0
+        dm = _DEF_RE.match(line)
+        if not dm:
+            return 0.0
+        # dynamic-update-slice writes only the update region in place;
+        # charging the full buffer in+out misprices KV-cache appends.
+        if "dynamic-update-slice(" in dm.group(2):
+            ops = _OPERAND_RE.findall(
+                dm.group(2).split("dynamic-update-slice(", 1)[1])
+            upd = self.sizes.get(ops[1]) if len(ops) > 1 else None
+            return float(2 * upd[0]) if upd else 0.0
+        # dynamic-slice / slice / gather read only the selected region
+        # (charging the whole stacked-weights operand once per scan
+        # iteration was the dominant census error for decode cells).
+        if re.search(r"\b(dynamic-slice|slice|gather)\(", dm.group(2)):
+            out_b, _ = _parse_dims(dm.group(2))
+            return float(2 * out_b)
+        # standalone widening converts of whole weight stacks are a CPU
+        # artifact (CPU dots consume f32; TPU consumes bf16 in place).
+        if ("wrapped_convert" in dm.group(2)
+                or re.match(r"[a-z0-9\[\],{}: ]*convert\(", dm.group(2))):
+            return 0.0
+        out_b, _ = _parse_dims(dm.group(2))
+        # fusion operands that the fusion only dynamic-slices are charged
+        # at the sliced-window size, not the whole (stacked) operand
+        sliced: Dict[int, float] = {}
+        fm = _FUSION_CALL_RE.search(dm.group(2))
+        if fm and "fusion(" in dm.group(2):
+            sliced = self._sliced_params.get(fm.group(1), {})
+        call = re.search(r"[a-z][\w\-]*\(([^)]*)\)", dm.group(2))
+        in_b = 0
+        if call:
+            for i, om in enumerate(_OPERAND_RE.finditer(call.group(1))):
+                if i in sliced:
+                    in_b += sliced[i]
+                    continue
+                e = self.sizes.get(om.group(1))
+                if e:
+                    in_b += e[0]
+        return float(out_b + in_b)
+
+    def walk(self, comp: Optional[str] = None, flops_only: bool = False,
+             depth: int = 0) -> Dict:
+        comp = comp or self.entry
+        key = (comp, flops_only)
+        if key in self._memo:
+            return dict(self._memo[key])
+        if comp not in self.comps or depth > 16:
+            return {"flops": 0.0, "bytes": 0.0,
+                    "coll": defaultdict(float)}
+        acc = {"flops": 0.0, "bytes": 0.0, "coll": defaultdict(float)}
+        for line in self.comps[comp]:
+            if _DOT_RE.search(line):
+                acc["flops"] += self._dot_flops(line)
+                if not flops_only:
+                    acc["bytes"] += self._line_bytes(line)
+                continue
+            cm = _COLL_RE.search(line)
+            if cm and cm.group(2) != "-done":
+                total = 0
+                for om in _OPERAND_RE.finditer(cm.group(3)):
+                    e = self.sizes.get(om.group(1))
+                    if e:
+                        total += e[0]
+                if total == 0:
+                    dm = _DEF_RE.match(line)
+                    if dm:
+                        total = _parse_dims(dm.group(2))[0]
+                # XLA's CPU backend promotes bf16 all-reduces to f32 and
+                # tags the reducer "*_promoted"; TPU reduces bf16
+                # natively, so charge the pre-promotion width.
+                if "_promoted" in line:
+                    total //= 2
+                acc["coll"][cm.group(1)] += total
+                self.coll_counts[cm.group(1)] += 1
+                if not flops_only:
+                    acc["bytes"] += self._line_bytes(line)
+                continue
+            if _WHILE_RE.search(line):
+                bm = _BODY_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                if bm:
+                    sub = self.walk(bm.group(1), flops_only, depth + 1)
+                    acc["flops"] += trips * sub["flops"]
+                    acc["bytes"] += trips * sub["bytes"]
+                    for k, v in sub["coll"].items():
+                        acc["coll"][k] += trips * v
+                continue
+            if "fusion(" in line:
+                fm = _FUSION_CALL_RE.search(line)
+                if fm:          # fused dots still burn MXU flops
+                    sub = self.walk(fm.group(1), True, depth + 1)
+                    acc["flops"] += sub["flops"]
+                if not flops_only:
+                    acc["bytes"] += self._line_bytes(line)
+                continue
+            bmatch = _BRANCHES_RE.search(line)
+            if bmatch:
+                for name in re.findall(r"[\w.\-]+", bmatch.group(1)):
+                    sub = self.walk(name, flops_only, depth + 1)
+                    acc["flops"] += sub["flops"]
+                    acc["bytes"] += sub["bytes"]
+                    for k, v in sub["coll"].items():
+                        acc["coll"][k] += v
+                continue
+            if _CALL_RE.search(line):
+                tm = _TO_APPLY_RE.search(line)
+                if tm:
+                    sub = self.walk(tm.group(1), flops_only, depth + 1)
+                    acc["flops"] += sub["flops"]
+                    acc["bytes"] += sub["bytes"]
+                    for k, v in sub["coll"].items():
+                        acc["coll"][k] += v
+                continue
+            if not flops_only:
+                acc["bytes"] += self._line_bytes(line)
+        self._memo[key] = {
+            "flops": acc["flops"], "bytes": acc["bytes"],
+            "coll": dict(acc["coll"]),
+        }
+        return dict(self._memo[key])
+
+
+def hlo_cost(hlo_text: str) -> Dict:
+    """Trip-weighted per-device {flops, bytes, collectives} census."""
+    hc = HloCost(hlo_text)
+    res = hc.walk()
+    coll = res["coll"]
+    return {
+        "flops": res["flops"],
+        "bytes": res["bytes"],
+        "collectives": {
+            "by_kind_bytes": dict(coll),
+            "counts": dict(hc.coll_counts),
+            "total_bytes": float(sum(coll.values())),
+            "note": "per-device bytes; x devices for fleet-global traffic",
+        },
+    }
+
+
+def collective_census(hlo_text: str) -> Dict:
+    return hlo_cost(hlo_text)["collectives"]
+
+
+def count_ops(hlo_text: str) -> Dict[str, int]:
+    """Fusion-level op histogram used by the perf loop to spot redundant
+    collectives / transposes between sharded ops."""
+    interesting = COLLECTIVE_KINDS + ("transpose", "reshape", "fusion",
+                                      "dot", "dynamic-update-slice",
+                                      "while", "scatter", "gather")
+    out = {}
+    for op in interesting:
+        out[op] = len(re.findall(rf"\b{op}(?:-start)?\(", hlo_text))
+    return out

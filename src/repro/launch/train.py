@@ -1,0 +1,71 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch qwen3_8b --steps 1000 \
+        --checkpoint-dir /ckpt/qwen3 [--mode zero] [--multi-pod]
+
+On a real pod this process runs per host (jax.distributed.initialize is
+called when JAX_COORDINATOR is set); here it also drives single-host
+runs with reduced configs (--reduced) for CI. Fault tolerance: resumes
+from the newest complete checkpoint, checkpoints on SIGTERM, flags
+stragglers, and replays the data stream exactly (step-keyed PRNG).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=4096)
+    ap.add_argument("--global-batch", type=int, default=256)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--mode", default="tp", choices=["tp", "zero"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config for single-host runs")
+    ap.add_argument("--grad-compress-bits", type=int, default=None)
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        import jax
+        jax.distributed.initialize()       # multi-host pod entry
+
+    from repro.configs import get_config
+    from repro.train import Trainer, TrainConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        args.seq_len = min(args.seq_len, 128)
+        args.global_batch = min(args.global_batch, 4)
+
+    tc = TrainConfig(
+        steps=args.steps,
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=max(args.steps // 10, 1),
+        grad_compress_bits=args.grad_compress_bits
+        or cfg.compression.grad_bits,
+    )
+
+    if args.reduced:
+        metrics = Trainer(cfg, tc).run(install_signals=True)
+    else:
+        # full-scale path: production mesh + sharded step programs
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        with mesh:
+            metrics = Trainer(cfg, tc).run(install_signals=True)
+
+    print(f"final loss: {metrics['final_loss']:.4f}  "
+          f"steps: {metrics['last_step'] + 1}  "
+          f"stragglers: {metrics['straggler_events']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,188 @@
+"""Attention: chunked-flash training path + cached decode path.
+
+The training/prefill path is an online-softmax double-scan (q chunks x kv
+chunks) in pure JAX so peak memory is O(S * chunk) instead of O(S^2) —
+required for the 32k prefill cells to fit HBM at compile time. Causal,
+local-window (recurrentgemma / whisper-free) and full (encoder / cross)
+masks share one implementation.
+
+The decode path scores one new token against a (possibly packed) KV
+cache; with packing, HBM traffic per step drops by bits/32 — the
+register-file insight applied to the dominant decode term. GQA is
+grouped: q heads are folded onto their kv head before the scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tensor_store import PackedTensor, is_packed, pack_tensor
+from repro.distributed.sharding import constrain
+from repro.kernels import ops as kops
+
+NEG_INF = -1e30
+
+
+def _chunk_mask(q_pos, k_pos, causal: bool, window: int, prefix: int = 0):
+    """(Sq_blk, Sk_blk) boolean validity mask. ``prefix`` marks a fully
+    visible (bidirectional) leading segment — the VLM image tokens."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        c = q_pos[:, None] >= k_pos[None, :]
+        if prefix:
+            c |= k_pos[None, :] < prefix
+        m &= c
+    if window:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "prefix", "q_chunk", "kv_chunk"),
+)
+def flash_attention(
+    q: jnp.ndarray,            # (B, Sq, H, D)
+    k: jnp.ndarray,            # (B, Sk, Hkv, D)
+    v: jnp.ndarray,            # (B, Sk, Hkv, D)
+    causal: bool = True,
+    window: int = 0,
+    prefix: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / np.sqrt(d)
+
+    def _divisor_chunk(target: int, s: int) -> int:
+        c = min(target, s)
+        while s % c:              # largest divisor <= target (trace-time)
+            c -= 1
+        return c
+
+    q_chunk = _divisor_chunk(q_chunk, sq)
+    kv_chunk = _divisor_chunk(kv_chunk, sk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+
+    # (B, Hkv, G, nq, qc, D) queries; (B, Hkv, nk, kc, D) keys/values
+    qs = q.reshape(b, nq, q_chunk, hkv, g, d).transpose(0, 3, 4, 1, 2, 5)
+    ks = k.reshape(b, nk, kv_chunk, hkv, d).transpose(0, 3, 1, 2, 4)
+    vs = v.reshape(b, nk, kv_chunk, hkv, d).transpose(0, 3, 1, 2, 4)
+
+    def per_q_chunk(qi, qc):
+        # qc: (B, Hkv, G, qc, D)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            acc, m_run, l_run = carry
+            ki, kc, vc = inputs
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            # MXU-style: bf16 operands, f32 accumulation. Keeping q/k/v in
+            # the compute dtype (instead of upcasting) halves the dot-input
+            # traffic AND makes every cotangent crossing a TP boundary
+            # bf16 — the f32 activation all-reduces were the dominant
+            # collective (EXPERIMENTS.md section Perf, iteration 2).
+            logits = jnp.einsum(
+                "bkgqd,bkcd->bkgqc", qc, kc,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            mask = _chunk_mask(q_pos, k_pos, causal, window, prefix)
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, logits.max(-1, keepdims=True))
+            r = jnp.exp(m_run - m_new)
+            p = jnp.exp(logits - m_new)
+            acc = acc * r + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            l_run = l_run * r + p.sum(-1, keepdims=True)
+            return (acc, m_new, l_run), None
+
+        acc0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, hkv, g, q_chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk, 1), jnp.float32)
+        (acc, _, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.arange(nk), jnp.moveaxis(ks, 2, 0), jnp.moveaxis(vs, 2, 0)),
+        )
+        return acc / jnp.maximum(l, 1e-30)
+
+    out = jax.lax.map(
+        lambda args: per_q_chunk(*args),
+        (jnp.arange(nq), jnp.moveaxis(qs, 3, 0)),
+    )                                       # (nq, B, Hkv, G, qc, D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,                        # (B, H, D) one new token
+    k_cache, v_cache,                      # (B, S, Hkv, D) float, or
+                                           # (B, S, Hkv, D*bits/32) uint32
+    kv_len: jnp.ndarray,                   # (B,) valid lengths
+    kv_bits: Optional[int] = None,
+) -> jnp.ndarray:
+    """Score one token against the cache (packed path = kernel dispatch).
+
+    Packed caches are raw uint32 word arrays (scan-sliceable); ``kv_bits``
+    is the static format width from the compression plan.
+    """
+    if is_packed(k_cache):
+        kv_bits, k_cache, v_cache = (
+            k_cache.bits, k_cache.data, v_cache.data
+        )
+    if kv_bits:
+        return kops.kv_decode(
+            q, k_cache, v_cache, kv_len, kv_bits, q.shape[-1]
+        )
+    b, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32)
+    ) / np.sqrt(d)
+    mask = jnp.arange(s)[None, None, None, :] < kv_len[:, None, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def update_kv_cache(k_cache, v_cache, k_new, v_new, kv_len,
+                    kv_bits: Optional[int] = None):
+    """Insert one token's K/V at position kv_len per sequence.
+
+    Packed caches (uint32 words) update word-aligned lanes: one token's
+    (Hkv, D) row packs to (Hkv, D*bits/32) words — a masked writeback of
+    whole words, so no read-modify-write of neighbours (Section 3.2.6
+    analogue).
+    """
+    if kv_bits:
+        b = k_new.shape[0]
+        k_words = kops.pack(
+            k_new.reshape(b, -1).astype(jnp.float32), kv_bits
+        ).reshape(b, 1, k_new.shape[1], -1)
+        v_words = kops.pack(
+            v_new.reshape(b, -1).astype(jnp.float32), kv_bits
+        ).reshape(b, 1, v_new.shape[1], -1)
+        kd = _dus_rows(k_cache, k_words, kv_len)
+        vd = _dus_rows(v_cache, v_words, kv_len)
+        return kd, vd
+    k_cache = _dus_rows(k_cache, k_new[:, None], kv_len)
+    v_cache = _dus_rows(v_cache, v_new[:, None], kv_len)
+    return k_cache, v_cache
+
+
+def _dus_rows(cache, row, kv_len):
+    """Per-batch dynamic_update_slice at row kv_len[b]."""
+    def upd(c, r, l):
+        start = (l,) + (0,) * (c.ndim - 1)
+        return jax.lax.dynamic_update_slice(c, r.astype(c.dtype), start)
+    return jax.vmap(upd)(cache, row, kv_len)

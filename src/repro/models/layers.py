@@ -1,0 +1,98 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings, packed linear.
+
+Weights may arrive either as plain arrays or as ``PackedTensor`` leaves
+(the register-file analogue); ``linear`` dispatches transparently, so
+every model in the zoo supports packed execution without per-family code.
+Sharding is annotated with ``with_sharding_constraint`` using mesh axis
+names; outside a mesh context the constraints are no-ops.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tensor_store import PackedTensor, is_packed
+from repro.distributed.sharding import constrain
+
+
+def unpack_maybe(w, dtype=None):
+    """PackedTensor -> array (Value Extractor path); arrays pass through."""
+    if is_packed(w):
+        x = w.unpack()
+        return x.astype(dtype) if dtype is not None else x
+    return w if dtype is None else w.astype(dtype)
+
+
+def linear(x: jnp.ndarray, w, spec: str = "...d,df->...f") -> jnp.ndarray:
+    """einsum against a (possibly packed) weight."""
+    w = unpack_maybe(w, x.dtype)
+    return jnp.einsum(spec, x, w)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + unpack_maybe(scale, jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * unpack_maybe(scale, jnp.float32)
+            + unpack_maybe(bias, jnp.float32)).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def mlp(x, w_in, w_gate, w_out, gated: bool):
+    """SwiGLU (gated) or GELU MLP; d_ff sharded over 'model'."""
+    h = linear(x, w_in)
+    if gated:
+        g = linear(x, w_gate)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, ("data", None, "model"))
+    return linear(h, w_out, "...f,fd->...d")
+
+
+def embed(tokens: jnp.ndarray, table) -> jnp.ndarray:
+    """Token embedding; table (V, D) sharded over 'model' on V via a
+    one-hot matmul-friendly gather (XLA turns take into gather; for TP we
+    keep take and let GSPMD insert the collective)."""
+    t = unpack_maybe(table)
+    return jnp.take(t, tokens, axis=0)
+
+
+def unembed(x: jnp.ndarray, table_or_head, tied: bool) -> jnp.ndarray:
+    w = unpack_maybe(table_or_head, x.dtype)
+    if tied:
+        return jnp.einsum("...d,vd->...v", x, w)
+    return jnp.einsum("...d,dv->...v", x, w)
+
+
+def init_dense(rng, shape, scale: Optional[float] = None, dtype="bfloat16"):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(rng, shape, jnp.float32) * s).astype(dtype)

@@ -1,0 +1,461 @@
+"""Model assembly: one ``LM`` facade over every assigned family.
+
+Layers are *stacked* (leading L dim) and executed with ``lax.scan`` +
+``jax.checkpoint`` so the HLO stays compact for 88-layer models and
+activation memory is O(1) in depth. Decode carries per-layer state slices
+through the same scan. The vocabulary projection and loss are chunked over
+the sequence so (B, S, 257k) logits never materialize.
+
+Public surface (used by train/serve/dryrun):
+  * ``init(rng)``             -> params pytree (or eval_shape for specs)
+  * ``loss(params, batch)``   -> scalar LM loss
+  * ``prefill(params, batch)``-> (last-token logits, decode state)
+  * ``decode_step(params, state, tokens)`` -> (logits, state)
+  * ``init_decode_state(batch, seq_len)``  -> zeroed state (donated arg)
+  * ``input_specs(shape)``    -> ShapeDtypeStructs for the dry-run
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack
+from repro.distributed.sharding import constrain
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def _stack_init(init_fn, rng, n, *args):
+    return jax.vmap(lambda r: init_fn(r, *args))(jax.random.split(rng, n))
+
+
+def _packed_kv_words(d: int, bits: int) -> int:
+    return bitpack.packed_group_words(d, bits)
+
+
+@dataclasses.dataclass
+class LM:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        dt = cfg.dtype
+        r = jax.random.split(rng, 8)
+        params: Dict[str, Any] = {
+            "embed": L.init_dense(r[0], (cfg.vocab_size, cfg.d_model),
+                                  scale=0.02, dtype=dt),
+            "final_norm": jnp.zeros((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.init_dense(
+                r[1], (cfg.d_model, cfg.vocab_size), dtype=dt
+            )
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            params["blocks"] = {
+                "attn": _stack_init(B.init_attention, r[2], cfg.n_layers, cfg),
+                "mlp": _stack_init(B.init_mlp, r[3], cfg.n_layers, cfg),
+            }
+        elif fam == "moe":
+            params["blocks"] = {
+                "attn": _stack_init(B.init_attention, r[2], cfg.n_layers, cfg),
+                "moe": _stack_init(B.init_moe, r[3], cfg.n_layers, cfg),
+            }
+        elif fam == "ssm":
+            params["blocks"] = {
+                "mamba": _stack_init(B.init_mamba, r[2], cfg.n_layers, cfg),
+            }
+        elif fam == "hybrid":
+            g = cfg.pattern_rec + cfg.pattern_attn
+            groups = cfg.n_layers // g
+            tail = cfg.n_layers - groups * g
+            params["blocks"] = {
+                "rec": _stack_init(
+                    lambda rr, c: _stack_init(B.init_rglru, rr,
+                                              cfg.pattern_rec, c),
+                    r[2], groups, cfg),
+                "attn": _stack_init(B.init_attention, r[3], groups, cfg),
+                "mlp": _stack_init(
+                    lambda rr, c: _stack_init(B.init_mlp, rr, g, c),
+                    r[4], groups, cfg),
+            }
+            if tail:
+                params["tail"] = {
+                    "rec": _stack_init(B.init_rglru, r[5], tail, cfg),
+                    "mlp": _stack_init(B.init_mlp, r[6], tail, cfg),
+                }
+        elif fam == "encdec":
+            params["enc_blocks"] = {
+                "attn": _stack_init(B.init_attention, r[2],
+                                    cfg.encoder_layers, cfg),
+                "mlp": _stack_init(B.init_mlp, r[3], cfg.encoder_layers, cfg),
+            }
+            params["blocks"] = {
+                "self": _stack_init(B.init_attention, r[4], cfg.n_layers,
+                                    cfg),
+                "cross": _stack_init(B.init_attention, r[5], cfg.n_layers,
+                                     cfg),
+                "mlp": _stack_init(B.init_mlp, r[6], cfg.n_layers, cfg),
+            }
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), dt)
+        else:
+            raise ValueError(fam)
+        return params
+
+    # -------------------------------------------------------------- forward
+    def _positions(self, batch_shape, s):
+        return jnp.broadcast_to(jnp.arange(s)[None], (batch_shape, s))
+
+    @staticmethod
+    def _nested_scan(body, x, stacked, n_layers: int):
+        """Two-level remat scan: outer scan over G groups of layers, the
+        whole group body checkpointed. Backward memory = G carries +
+        (L/G) carries during a group's recompute, i.e. O(sqrt L) residual
+        -stream snapshots instead of O(L) — required to fit train_4k for
+        the 40-88 layer archs (see DESIGN.md)."""
+        g = max((d for d in range(1, 9) if n_layers % d == 0))
+        if g <= 1 or g == n_layers:
+            x, _ = jax.lax.scan(jax.checkpoint(body), x, stacked)
+            return x
+        inner = n_layers // g
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((g, inner) + a.shape[1:]), stacked)
+
+        @jax.checkpoint
+        def group_body(h, gp):
+            h, _ = jax.lax.scan(jax.checkpoint(body), h, gp)
+            return h, None
+
+        x, _ = jax.lax.scan(group_body, x, grouped)
+        return x
+
+    def _backbone(self, params, x, positions, prefix: int = 0,
+                  enc_out=None) -> jnp.ndarray:
+        cfg = self.cfg
+        fam = cfg.family
+
+        if fam in ("dense", "vlm", "moe"):
+            def body(h, lp):
+                h = B.attention_apply(lp["attn"], h, cfg, positions,
+                                      causal=True, prefix=prefix)
+                if fam == "moe":
+                    h = B.moe_apply(lp["moe"], h, cfg)
+                else:
+                    h = B.mlp_apply(lp["mlp"], h, cfg)
+                h = constrain(h, ("data", None, None))
+                return h, None
+            x = self._nested_scan(body, x, params["blocks"], cfg.n_layers)
+        elif fam == "ssm":
+            def body(h, lp):
+                h = B.mamba_apply(lp["mamba"], h, cfg)
+                h = constrain(h, ("data", None, None))
+                return h, None
+            x = self._nested_scan(body, x, params["blocks"], cfg.n_layers)
+        elif fam == "hybrid":
+            def body(h, lp):
+                for i in range(cfg.pattern_rec):
+                    h = B.rglru_apply(
+                        jax.tree_util.tree_map(lambda a: a[i], lp["rec"]),
+                        h, cfg)
+                    h = B.mlp_apply(
+                        jax.tree_util.tree_map(lambda a: a[i], lp["mlp"]),
+                        h, cfg)
+                h = B.attention_apply(lp["attn"], h, cfg, positions,
+                                      causal=True, window=cfg.attn_window)
+                h = B.mlp_apply(
+                    jax.tree_util.tree_map(
+                        lambda a: a[cfg.pattern_rec], lp["mlp"]),
+                    h, cfg)
+                h = constrain(h, ("data", None, None))
+                return h, None
+            x, _ = jax.lax.scan(jax.checkpoint(body), x, params["blocks"])
+            if "tail" in params:
+                def tail_body(h, lp):
+                    h = B.rglru_apply(lp["rec"], h, cfg)
+                    h = B.mlp_apply(lp["mlp"], h, cfg)
+                    return h, None
+                x, _ = jax.lax.scan(jax.checkpoint(tail_body), x,
+                                    params["tail"])
+        elif fam == "encdec":
+            def body(h, lp):
+                h = B.attention_apply(lp["self"], h, cfg, positions,
+                                      causal=True)
+                h = B.attention_apply(lp["cross"], h, cfg, positions,
+                                      kv_source=enc_out, use_rope=False)
+                h = B.mlp_apply(lp["mlp"], h, cfg)
+                h = constrain(h, ("data", None, None))
+                return h, None
+            x, _ = jax.lax.scan(jax.checkpoint(body), x, params["blocks"])
+        return x
+
+    def _encode(self, params, frames) -> jnp.ndarray:
+        """Whisper encoder over stub frame embeddings (B, Se, D)."""
+        cfg = self.cfg
+        pos = self._positions(frames.shape[0], frames.shape[1])
+
+        def body(h, lp):
+            h = B.attention_apply(lp["attn"], h, cfg, pos, causal=False)
+            h = B.mlp_apply(lp["mlp"], h, cfg)
+            return h, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), frames.astype(cfg.dtype),
+                            params["enc_blocks"])
+        return L.rms_norm(x, params["enc_norm"])
+
+    def _embed_inputs(self, params, batch) -> Tuple[jnp.ndarray, int, Any]:
+        """(hidden, prefix_len, enc_out) for any family's batch dict."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = L.embed(tokens, params["embed"]).astype(cfg.dtype)
+        x = constrain(x, ("data", None, None))
+        prefix = 0
+        enc_out = None
+        if cfg.family == "vlm":
+            img = batch["patch_embeds"].astype(cfg.dtype)   # (B, P, D)
+            x = jnp.concatenate([img, x], axis=1)
+            prefix = cfg.num_image_tokens
+        if cfg.family == "encdec":
+            enc_out = self._encode(params, batch["frames"])
+        return x, prefix, enc_out
+
+    def logits_fn(self, params, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = L.rms_norm(x, params["final_norm"])
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        return L.unembed(x, head, cfg.tie_embeddings)
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params, batch, s_chunk: int = 512) -> jnp.ndarray:
+        cfg = self.cfg
+        x, prefix, enc_out = self._embed_inputs(params, batch)
+        positions = self._positions(x.shape[0], x.shape[1])
+        h = self._backbone(params, x, positions, prefix, enc_out)
+        if prefix:
+            h = h[:, prefix:]
+        labels = batch["labels"]
+        b, s = labels.shape
+        s_chunk = min(s_chunk, s)
+        n_chunks = s // s_chunk
+
+        def ce_chunk(tot, i):
+            hs = jax.lax.dynamic_slice_in_dim(h, i * s_chunk, s_chunk, 1)
+            ls = jax.lax.dynamic_slice_in_dim(labels, i * s_chunk,
+                                              s_chunk, 1)
+            logits = self.logits_fn(params, hs).astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            # gold logit via one-hot contraction: with vocab sharded over
+            # 'model', this reduces locally + tiny psum, where a gather
+            # (take_along_axis) makes GSPMD all-gather the full logits
+            # (~vocab/s_chunk x more collective bytes; see EXPERIMENTS.md
+            # section Perf, iteration 1)
+            onehot = jax.nn.one_hot(ls, logits.shape[-1],
+                                    dtype=logits.dtype)
+            gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+            return tot + (logz - gold).sum(), None
+
+        tot, _ = jax.lax.scan(ce_chunk, jnp.float32(0.0),
+                              jnp.arange(n_chunks))
+        return tot / (b * s)
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        """Run the full prompt, return last-position logits. (The decode
+        state produced here is rebuilt by the serving layer; the dry-run
+        lowers prefill for throughput and decode_step for latency.)"""
+        x, prefix, enc_out = self._embed_inputs(params, batch)
+        positions = self._positions(x.shape[0], x.shape[1])
+        h = self._backbone(params, x, positions, prefix, enc_out)
+        return self.logits_fn(params, h[:, -1:]), {}
+
+    # --------------------------------------------------------------- decode
+    def init_decode_state(self, batch_size: int, seq_len: int,
+                          abstract: bool = False) -> Dict:
+        """Zeroed per-layer decode state (stacked on L for the scan)."""
+        cfg = self.cfg
+        kv_bits = cfg.compression.kv_bits
+        hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+        dt = cfg.dtype
+        mk = (jax.ShapeDtypeStruct if abstract
+              else (lambda sh, d: jnp.zeros(sh, d)))
+
+        def kv(layers, s):
+            if kv_bits:
+                w = _packed_kv_words(hd, kv_bits)
+                return {
+                    "k": mk((layers, batch_size, s, hkv, w), jnp.uint32),
+                    "v": mk((layers, batch_size, s, hkv, w), jnp.uint32),
+                }
+            return {
+                "k": mk((layers, batch_size, s, hkv, hd), dt),
+                "v": mk((layers, batch_size, s, hkv, hd), dt),
+            }
+
+        state: Dict[str, Any] = {
+            "len": mk((batch_size,), jnp.int32),
+        }
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            state["kv"] = kv(cfg.n_layers, seq_len)
+        elif fam == "ssm":
+            state["conv"] = mk(
+                (cfg.n_layers, batch_size, cfg.d_conv - 1, cfg.d_inner), dt)
+            state["ssm"] = mk(
+                (cfg.n_layers, batch_size, cfg.d_inner, cfg.ssm_state),
+                jnp.float32)
+        elif fam == "hybrid":
+            g = cfg.pattern_rec + cfg.pattern_attn
+            groups = cfg.n_layers // g
+            tail = cfg.n_layers - groups * g
+            lw = cfg.lru_width or cfg.d_model
+            win = min(cfg.attn_window or seq_len, seq_len)
+            state["kv"] = kv(groups, win)
+            state["rec"] = {
+                "conv": mk((groups, cfg.pattern_rec, batch_size,
+                            cfg.d_conv - 1, lw), dt),
+                "h": mk((groups, cfg.pattern_rec, batch_size, lw),
+                        jnp.float32),
+            }
+            if tail:
+                state["tail_rec"] = {
+                    "conv": mk((tail, batch_size, cfg.d_conv - 1, lw), dt),
+                    "h": mk((tail, batch_size, lw), jnp.float32),
+                }
+        elif fam == "encdec":
+            state["kv"] = kv(cfg.n_layers, seq_len)
+            # cross K/V computed from the encoder at prefill time
+            if kv_bits:
+                w = _packed_kv_words(hd, kv_bits)
+                state["cross"] = {
+                    "ck": mk((cfg.n_layers, batch_size, cfg.encoder_seq,
+                              hkv, w), jnp.uint32),
+                    "cv": mk((cfg.n_layers, batch_size, cfg.encoder_seq,
+                              hkv, w), jnp.uint32),
+                }
+            else:
+                state["cross"] = {
+                    "ck": mk((cfg.n_layers, batch_size, cfg.encoder_seq,
+                              hkv, hd), dt),
+                    "cv": mk((cfg.n_layers, batch_size, cfg.encoder_seq,
+                              hkv, hd), dt),
+                }
+            state["clen"] = mk((batch_size,), jnp.int32)
+        return state
+
+    def decode_step(self, params, state: Dict,
+                    tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+        """tokens: (B, 1) -> (logits (B, 1, V), updated state)."""
+        cfg = self.cfg
+        fam = cfg.family
+        x = L.embed(tokens, params["embed"]).astype(cfg.dtype)
+        x = constrain(x, ("data", None, None))
+        positions = state["len"][:, None]
+
+        if fam in ("dense", "vlm", "moe"):
+            def body(h, xs):
+                lp, kv = xs
+                st = {"k": kv["k"], "v": kv["v"], "len": state["len"]}
+                h, st = B.attention_decode(lp["attn"], h, cfg, st, positions)
+                if fam == "moe":
+                    h = B.moe_apply(lp["moe"], h, cfg)
+                else:
+                    h = B.mlp_apply(lp["mlp"], h, cfg)
+                return h, {"k": st["k"], "v": st["v"]}
+            x, new_kv = jax.lax.scan(body, x,
+                                     (params["blocks"], state["kv"]))
+            state = dict(state, kv=new_kv)
+        elif fam == "ssm":
+            def body(h, xs):
+                lp, st = xs
+                h, st = B.mamba_decode(lp["mamba"], h, cfg, st)
+                return h, st
+            x, new_st = jax.lax.scan(
+                body, x,
+                (params["blocks"],
+                 {"conv": state["conv"], "ssm": state["ssm"]}),
+            )
+            state = dict(state, **new_st)
+        elif fam == "hybrid":
+            def body(h, xs):
+                lp, kv, rec = xs
+                new_rec = {"conv": [], "h": []}
+                for i in range(cfg.pattern_rec):
+                    st = {"conv": rec["conv"][i], "h": rec["h"][i]}
+                    h, st = B.rglru_decode(
+                        jax.tree_util.tree_map(lambda a: a[i], lp["rec"]),
+                        h, cfg, st)
+                    h = B.mlp_apply(
+                        jax.tree_util.tree_map(lambda a: a[i], lp["mlp"]),
+                        h, cfg)
+                    new_rec["conv"].append(st["conv"])
+                    new_rec["h"].append(st["h"])
+                st = {"k": kv["k"], "v": kv["v"], "len": state["len"]}
+                h, st = B.attention_decode(lp["attn"], h, cfg, st, positions,
+                                           window=cfg.attn_window)
+                h = B.mlp_apply(
+                    jax.tree_util.tree_map(
+                        lambda a: a[cfg.pattern_rec], lp["mlp"]),
+                    h, cfg)
+                return h, (
+                    {"k": st["k"], "v": st["v"]},
+                    {"conv": jnp.stack(new_rec["conv"]),
+                     "h": jnp.stack(new_rec["h"])},
+                )
+            x, (new_kv, new_rec) = jax.lax.scan(
+                body, x, (params["blocks"], state["kv"], state["rec"]))
+            state = dict(state, kv=new_kv, rec=new_rec)
+            if "tail" in params:
+                def tail_body(h, xs):
+                    lp, st = xs
+                    h, st = B.rglru_decode(lp["rec"], h, cfg, st)
+                    h = B.mlp_apply(lp["mlp"], h, cfg)
+                    return h, st
+                x, new_tail = jax.lax.scan(
+                    tail_body, x, (params["tail"], state["tail_rec"]))
+                state = dict(state, tail_rec=new_tail)
+        elif fam == "encdec":
+            def body(h, xs):
+                lp, kv, cross = xs
+                st = {"k": kv["k"], "v": kv["v"], "len": state["len"]}
+                h, st = B.attention_decode(lp["self"], h, cfg, st, positions)
+                cst = {"ck": cross["ck"], "cv": cross["cv"],
+                       "clen": state["clen"]}
+                h, _ = B.attention_decode(lp["cross"], h, cfg, cst,
+                                          positions, cross=True)
+                h = B.mlp_apply(lp["mlp"], h, cfg)
+                return h, {"k": st["k"], "v": st["v"]}
+            x, new_kv = jax.lax.scan(
+                body, x, (params["blocks"], state["kv"], state["cross"]))
+            state = dict(state, kv=new_kv)
+
+        logits = self.logits_fn(params, x)
+        state = dict(state, len=state["len"] + 1)
+        return logits, state
+
+    # ---------------------------------------------------------- input specs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (weak-type
+        correct, shardable, no allocation)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs: Dict[str, Any] = {}
+        if shape.kind in ("train", "prefill"):
+            specs["tokens"] = toks
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            if cfg.family == "vlm":
+                specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        else:                                   # decode: one new token
+            specs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        return specs

@@ -1,0 +1,1 @@
+from repro.train.loop import Trainer, TrainConfig  # noqa: F401

@@ -1,0 +1,162 @@
+"""Slice allocator + indirection tables + register-file model (Sections
+3.2/4.3): packing invariants, split behaviour, TVE/TVT data paths."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import (
+    Allocation,
+    IndirectionEntry,
+    Operand,
+    SliceAllocator,
+)
+from repro.core.formats import SLICES_PER_REGISTER
+from repro.core.regfile import (
+    PackedRegisterFile,
+    baseline_register_file,
+    extract_slices,
+    scatter_slices,
+)
+
+
+def _ops(widths, floats=()):
+    return [
+        Operand(name=f"v{i}", bits=w, is_float=(i in floats),
+                signed=True)
+        for i, w in enumerate(widths)
+    ]
+
+
+def test_entry_encoding_32bit():
+    e = IndirectionEntry("x", reg0=17, mask0=0b10110000, reg1=254,
+                         mask1=0b00000111)
+    word = e.encode()
+    assert 0 <= word < 2**32
+    d = IndirectionEntry.decode(word, "x")
+    assert (d.reg0, d.mask0, d.reg1, d.mask1) == (17, 0xB0, 254, 7)
+
+
+def test_figure3_convention():
+    """Fig. 3: slice 0 -> r0 slice 7; slices 1..3 -> r1 slices 2,3,6."""
+    e = IndirectionEntry("f16", reg0=0, mask0=0b10000000, reg1=1,
+                         mask1=0b01001100)
+    assert e.slice_positions() == ((0, 7), (1, 2), (1, 3), (1, 6))
+    assert e.split and e.slices == 4
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from([4, 8, 12, 16, 20, 24, 28, 32]),
+                min_size=1, max_size=64))
+def test_allocation_invariants(widths):
+    ops = _ops(widths)
+    alloc = SliceAllocator().allocate(ops, whole_program=True)
+    # every operand placed, no slice assigned twice within a register
+    used = {}
+    for e in alloc.entries.values():
+        for reg, mask in ((e.reg0, e.mask0), (e.reg1, e.mask1)):
+            if mask == 0:
+                continue
+            assert used.get(reg, 0) & mask == 0, "slice double-booked"
+            used[reg] = used.get(reg, 0) | mask
+        assert e.slices == -(-[o for o in ops
+                               if o.name == e.name][0].bits // 4)
+    # pressure sandwich: ideal <= achieved <= baseline
+    assert alloc.ideal_pressure <= alloc.register_pressure
+    assert alloc.register_pressure <= alloc.baseline_pressure
+    # with <=2-way splits the allocator stays within 1 register of ideal
+    assert alloc.register_pressure <= alloc.ideal_pressure + 1
+
+
+def test_liveness_reduces_pressure():
+    # 8 operands of 32 bits, but only 2 alive at any time
+    ops = [Operand(name=f"v{i}", bits=32, start=i, end=i + 2)
+           for i in range(8)]
+    alloc = SliceAllocator().allocate(ops)
+    assert alloc.baseline_pressure == 2
+    assert alloc.register_pressure == 2
+
+
+def test_prefer_contiguous_never_splits():
+    ops = _ops([20, 20, 20, 20, 20])
+    alloc = SliceAllocator(prefer_contiguous=True).allocate(
+        ops, whole_program=True)
+    assert alloc.split_count == 0
+    alloc2 = SliceAllocator(prefer_contiguous=False).allocate(
+        ops, whole_program=True)
+    assert alloc2.register_pressure <= alloc.register_pressure
+
+
+# -- register file data paths -------------------------------------------------
+
+def test_slice_gather_scatter_inverse():
+    rng = np.random.default_rng(0)
+    word = jnp.asarray(rng.integers(0, 2**32, 32, dtype=np.uint32))
+    for mask in (0b10000000, 0b01001100, 0b11111111, 0b00010001):
+        k = bin(mask).count("1")
+        code = extract_slices(word, mask, 0)
+        back = scatter_slices(code, mask, 0)
+        lane_mask = 0
+        for s in range(8):
+            if mask & (1 << s):
+                lane_mask |= 0xF << (4 * s)
+        assert (np.asarray(back) ==
+                (np.asarray(word) & np.uint32(lane_mask))).all()
+
+
+@pytest.mark.parametrize("bits,is_float", [(16, True), (8, True),
+                                           (12, False), (20, False)])
+def test_regfile_write_read_roundtrip(bits, is_float):
+    ops = _ops([bits, 28, bits], floats={0, 2} if is_float else set())
+    alloc = SliceAllocator().allocate(ops, whole_program=True)
+    rf = PackedRegisterFile(allocation=alloc, num_regs=8)
+    rng = np.random.default_rng(1)
+    if is_float:
+        vals = jnp.asarray(rng.standard_normal(32).astype(np.float32))
+        rf.write("v0", vals)
+        got = rf.read("v0")
+        # value round-trips through the format exactly once
+        from repro.core.formats import FLOAT_FORMATS, decode_float, \
+            encode_float
+        fmt = FLOAT_FORMATS[bits]
+        expect = decode_float(encode_float(vals, fmt), fmt)
+        assert (np.asarray(got) == np.asarray(expect)).all()
+    else:
+        lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+        vals = jnp.asarray(
+            rng.integers(lo, hi + 1, 32).astype(np.int32))
+        rf.write("v0", vals)
+        assert (np.asarray(rf.read("v0")) == np.asarray(vals)).all()
+
+
+def test_masked_writeback_preserves_neighbours():
+    """Writing one operand must not disturb co-resident operands
+    (Section 3.2.6 masked bit lines)."""
+    ops = _ops([8, 8, 8, 8])
+    alloc = SliceAllocator().allocate(ops, whole_program=True)
+    rf = PackedRegisterFile(allocation=alloc, num_regs=4)
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(-100, 100, 32).astype(np.int32))
+    b = jnp.asarray(rng.integers(-100, 100, 32).astype(np.int32))
+    rf.write("v0", a)
+    rf.write("v1", b)
+    rf.write("v0", a + 1)
+    assert (np.asarray(rf.read("v1")) == np.asarray(b)).all()
+    assert (np.asarray(rf.read("v0")) == np.asarray(a + 1)).all()
+
+
+def test_double_fetch_accounting():
+    ops = _ops([20, 20, 20])         # 5 slices each -> one must split
+    alloc = SliceAllocator().allocate(ops, whole_program=True)
+    rf = PackedRegisterFile(allocation=alloc, num_regs=4)
+    for name in alloc.entries:
+        rf.read_raw(name)
+    assert rf.double_fetches == alloc.split_count
+
+
+def test_baseline_rf_is_32bit_granularity():
+    rf = baseline_register_file(num_regs=4)
+    vals = jnp.asarray(np.arange(32, dtype=np.int32) - 16)
+    rf.write("r2", vals)
+    assert (np.asarray(rf.read("r2")) == np.asarray(vals)).all()
+    assert rf.allocation.register_pressure == 4

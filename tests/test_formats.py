@@ -1,0 +1,117 @@
+"""Table 3 float formats + narrow ints: exactness, IEEE conformance,
+round-trip and monotonicity properties (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+
+ALL_BITS = sorted(F.FLOAT_FORMATS)
+
+
+def test_table3_layout():
+    # Exact Table 3: total -> (exp, mantissa), all with a sign bit.
+    expected = {32: (8, 23), 28: (7, 20), 24: (6, 17), 20: (5, 14),
+                16: (5, 10), 12: (4, 7), 8: (3, 4)}
+    for bits, (e, m) in expected.items():
+        fmt = F.FLOAT_FORMATS[bits]
+        assert (fmt.exp_bits, fmt.mantissa_bits) == (e, m)
+        assert 1 + fmt.exp_bits + fmt.mantissa_bits == bits
+
+
+def test_af16_matches_ieee_half_exhaustive_specials():
+    vals = np.array(
+        [0.0, -0.0, 1.0, -1.0, np.inf, -np.inf, np.nan, 65504.0,
+         65520.0, 65535.0, 1e-8, 5.96e-8, 2**-24, 2**-25, 1.5 * 2**-25,
+         2**-14, 2**-15, 3.14159265, -2.718281828],
+        np.float32,
+    )
+    fmt = F.FLOAT_FORMATS[16]
+    got = np.asarray(F.decode_float(F.encode_float(jnp.asarray(vals), fmt),
+                                    fmt))
+    ref = vals.astype(np.float16).astype(np.float32)
+    ok = (got == ref) | (np.isnan(got) & np.isnan(ref))
+    assert ok.all(), (vals[~ok], got[~ok], ref[~ok])
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(allow_nan=False, allow_infinity=False, width=32))
+def test_af16_matches_ieee_half_random(x):
+    fmt = F.FLOAT_FORMATS[16]
+    got = float(F.decode_float(
+        F.encode_float(jnp.float32(x), fmt), fmt))
+    ref = float(np.float32(x).astype(np.float16).astype(np.float32))
+    assert got == ref or (np.isnan(got) and np.isnan(ref))
+
+
+@pytest.mark.parametrize("bits", ALL_BITS)
+def test_roundtrip_idempotent(bits):
+    fmt = F.FLOAT_FORMATS[bits]
+    rng = np.random.default_rng(bits)
+    x = (rng.standard_normal(4096) *
+         np.exp(rng.uniform(-20, 20, 4096))).astype(np.float32)
+    once = F.decode_float(F.encode_float(jnp.asarray(x), fmt), fmt)
+    twice = F.decode_float(F.encode_float(once, fmt), fmt)
+    o, t = np.asarray(once), np.asarray(twice)
+    assert ((o == t) | (np.isnan(o) & np.isnan(t))).all()
+
+
+@pytest.mark.parametrize("bits", ALL_BITS)
+def test_specials_preserved(bits):
+    fmt = F.FLOAT_FORMATS[bits]
+    x = jnp.asarray([np.inf, -np.inf, np.nan, 0.0, -0.0], jnp.float32)
+    got = np.asarray(F.decode_float(F.encode_float(x, fmt), fmt))
+    assert got[0] == np.inf and got[1] == -np.inf
+    assert np.isnan(got[2])
+    assert got[3] == 0.0 and np.signbit(got[4])
+
+
+@pytest.mark.parametrize("bits", [8, 12, 16, 20, 24, 28])
+def test_relative_error_bound(bits):
+    """RNE error <= 2^-(m+1) relative, for values inside normal range."""
+    fmt = F.FLOAT_FORMATS[bits]
+    rng = np.random.default_rng(7)
+    x = (rng.uniform(1.0, 2.0, 8192) *
+         2.0 ** rng.integers(-fmt.bias + 2, fmt.bias - 1, 8192)
+         ).astype(np.float32)
+    got = np.asarray(F.decode_float(F.encode_float(jnp.asarray(x), fmt),
+                                    fmt))
+    rel = np.abs(got - x) / np.abs(x)
+    assert rel.max() <= 2.0 ** (-(fmt.mantissa_bits + 1)) * (1 + 1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.integers(-(2**31), 2**31 - 1),
+    st.integers(1, 32),
+)
+def test_int_roundtrip(v, bits):
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    v = max(lo, min(hi, v))
+    got = int(F.decode_int(F.encode_int(jnp.int32(v), bits, True), bits,
+                           True))
+    assert got == v
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(-(10**7), 10**7), st.integers(0, 10**5))
+def test_bits_needed_covers_range(lo, width):
+    hi = lo + width
+    bits, signed = F.int_bits_needed(lo, hi)
+    if signed:
+        assert -(1 << (bits - 1)) <= lo and hi <= (1 << (bits - 1)) - 1
+        if bits > 1:
+            assert not (-(1 << (bits - 2)) <= lo
+                        and hi <= (1 << (bits - 2)) - 1)
+    else:
+        assert hi <= (1 << bits) - 1
+
+
+def test_slice_math():
+    assert F.slices_for_bits(1) == 1
+    assert F.slices_for_bits(4) == 1
+    assert F.slices_for_bits(5) == 2
+    assert F.slices_for_bits(32) == 8
+    assert F.round_bits_to_slice(13) == 16

@@ -1,0 +1,125 @@
+"""The static HLO cost model is load-bearing for the roofline; pin its
+behaviour: trip-count weighting, dot flops, sliced-operand pricing,
+promoted-AR correction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_census import HloCost, collective_census, hlo_cost
+
+
+def _compile_text(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+def test_trip_weighted_dot_flops():
+    """XLA cost_analysis counts while bodies once; ours multiplies."""
+    def f_scan(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        c, _ = jax.lax.scan(body, x, w)
+        return c
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    txt = _compile_text(f_scan, x, w)
+    got = hlo_cost(txt)["flops"]
+    expect = 10 * 2 * 128 * 128 * 128
+    assert abs(got - expect) / expect < 0.05, (got, expect)
+
+
+def test_single_dot_flops_and_bytes():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+    txt = _compile_text(f, a, b)
+    cost = hlo_cost(txt)
+    assert abs(cost["flops"] - 2 * 64 * 256 * 32) / cost["flops"] < 0.05
+    # bytes at least inputs+outputs
+    min_bytes = (64 * 256 + 256 * 32 + 64 * 32) * 4
+    assert cost["bytes"] >= min_bytes * 0.9
+
+
+def test_scan_sliced_weights_not_charged_per_iteration():
+    """The stacked weights of a scan must not be charged wholesale per
+    layer (the dominant census error class)."""
+    def f_scan(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        c, _ = jax.lax.scan(body, x, w)
+        return c
+
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 64, 64), jnp.float32)
+    txt = _compile_text(f_scan, x, w)
+    cost = hlo_cost(txt)
+    stack_bytes = 32 * 64 * 64 * 4
+    # all 32 layers read the stack exactly once in total (plus carries);
+    # wholesale charging would give >= 32 * stack_bytes
+    assert cost["bytes"] < 8 * stack_bytes, cost["bytes"]
+
+
+def test_collective_census_synthetic():
+    hlo = """
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (p: f32[1024]) -> f32[1024] {
+  %p = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p), to_apply=%add
+  ROOT %ag = f32[1024]{0} all-gather(%ar), dimensions={0}
+}
+"""
+    c = collective_census(hlo)
+    assert c["by_kind_bytes"]["all-reduce"] == 4096
+    assert c["by_kind_bytes"]["all-gather"] == 4096
+    assert c["counts"] == {"all-reduce": 1, "all-gather": 1}
+
+
+def test_promoted_allreduce_halved():
+    hlo = """
+HloModule m
+
+%add.clone_promoted (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (p: f32[1000]) -> f32[1000] {
+  %p = f32[1000]{0} parameter(0)
+  ROOT %ar = f32[1000]{0} all-reduce(%p), to_apply=%add.clone_promoted
+}
+"""
+    c = collective_census(hlo)
+    assert c["by_kind_bytes"]["all-reduce"] == 2000   # charged at bf16
+
+
+def test_sliced_fusion_param_detection():
+    hlo = """
+HloModule m
+
+%fused (param_0: f32[32,64,64], param_1: s32[]) -> f32[1,64,64] {
+  %param_0 = f32[32,64,64]{2,1,0} parameter(0)
+  %param_1 = s32[] parameter(1)
+  %c = s32[] constant(0)
+  ROOT %ds = f32[1,64,64]{2,1,0} dynamic-slice(%param_0, %param_1, %c, %c), dynamic_slice_sizes={1,64,64}
+}
+
+ENTRY %main (w: f32[32,64,64], i: s32[]) -> f32[1,64,64] {
+  %w = f32[32,64,64]{2,1,0} parameter(0)
+  %i = s32[] parameter(1)
+  ROOT %f = f32[1,64,64]{2,1,0} fusion(%w, %i), kind=kLoop, calls=%fused
+}
+"""
+    hc = HloCost(hlo)
+    res = hc.walk()
+    # charged: slice window (2x out as in+out) not the whole stack
+    assert res["bytes"] <= 3 * (64 * 64 * 4) + 64, res["bytes"]

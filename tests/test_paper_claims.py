@@ -1,0 +1,131 @@
+"""Validation against the paper's own published numbers.
+
+Everything here is a claim the paper states explicitly; these tests are
+the reproduction's floor (DESIGN.md section 7).
+"""
+import numpy as np
+import pytest
+
+from repro.core.area_model import (
+    fermi_area,
+    fermi_fraction,
+    fermi_total,
+    tve_transistors,
+    volta_area,
+)
+from repro.core.occupancy import FERMI, ipc_uplift_table1, occupancy
+from repro.core.smsim import (
+    BASELINE_PIPE,
+    PROPOSED_PIPE,
+    KernelProfile,
+    PipelineConfig,
+    build_trace,
+    ipc_vs_occupancy,
+    simulate,
+    writeback_sensitivity,
+)
+
+
+# -- Table 1 / Section 2 -------------------------------------------------------
+
+def test_table1_imgvf_occupancy():
+    """IMGVF: 52 regs x 32 thr x 10 warps = 16,640 -> 1 block -> 21%;
+    packed 29 regs -> 3 blocks -> 62.5% (Section 2)."""
+    orig = occupancy(52, 10)
+    assert orig.blocks == 1
+    assert round(orig.occupancy, 2) == 0.21
+    packed = occupancy(29, 10)
+    assert packed.blocks == 3
+    assert packed.occupancy == 0.625
+
+
+def test_section61_imgvf_shared_memory_cap():
+    """At 24 regs the register file admits 4 blocks but 14,560 B shared
+    memory caps IMGVF at 3 blocks (Section 6.1)."""
+    no_smem = occupancy(24, 10)
+    assert no_smem.blocks == 4
+    with_smem = occupancy(24, 10, shared_bytes_per_block=14560)
+    assert with_smem.blocks == 3
+    assert with_smem.limiter == "shared"
+    assert with_smem.occupancy == 0.625
+
+
+def test_table1_helper():
+    t = ipc_uplift_table1()
+    assert round(t["original"]["occupancy"], 2) == 0.21
+    assert t["packed"]["occupancy"] == 0.625
+
+
+# -- Section 6.4 area ----------------------------------------------------------
+
+def test_area_components_match_paper():
+    a = fermi_area()
+    assert tve_transistors() == 1560                  # 1536 + 24
+    assert a.value_extractors == 798_720              # "about 800K"
+    assert a.value_converters == 249_600              # exact
+    assert a.indirection_tables == 98_304             # exact
+    assert a.value_truncators == 518_016              # exact
+    assert a.collector_extensions == 108_384          # exact
+    # "about 1.8 million transistors per streaming multiprocessor"
+    assert abs(a.total_per_sm - 1.8e6) / 1.8e6 < 0.02
+    # "1,800,000 x 15 = 27,000,000 transistors in total"
+    assert abs(fermi_total() - 27e6) / 27e6 < 0.02
+    # "less than 1% of the total transistor budget (3.1 billion)"
+    assert fermi_fraction() < 0.01
+
+
+def test_section7_volta_scaling():
+    v = volta_area()
+    # "1.8M - 0.4M = 1.4M transistors per processing block"
+    assert abs(v["per_block"] - 1.4e6) / 1.4e6 < 0.03
+    # "5.6M transistors per SM", "470 million transistors" total
+    assert abs(v["per_sm"] - 5.6e6) / 5.6e6 < 0.03
+    assert abs(v["total"] - 470e6) / 470e6 < 0.03
+    # "just over 2% of the total transistor budget"
+    assert 0.015 < v["fraction"] < 0.03
+
+
+# -- SM simulator: occupancy -> IPC mechanics (Sections 2, 6.2, 6.3) -----------
+
+IMGVF_LIKE = KernelProfile("imgvf", n_instructions=600, frac_mem=0.10,
+                           frac_sfu=0.03, dep_distance=4, seed=1)
+
+
+def test_ipc_rises_with_occupancy():
+    """The Table 1 mechanism: 10 -> 30 warps must raise IPC
+    substantially but sublinearly (paper: 196 -> 377, 1.92x)."""
+    ipc = ipc_vs_occupancy(IMGVF_LIKE, [10, 30])
+    ratio = ipc[30] / ipc[10]
+    assert 1.3 < ratio < 3.0, ipc
+
+
+def test_proposed_rf_close_to_artificial_occupancy():
+    """Table 1: proposed RF at 30 warps (352) reaches ~93% of the
+    artificially enlarged RF (377). Our model must show the proposed
+    pipeline within 20% of baseline at equal occupancy."""
+    trace = build_trace(IMGVF_LIKE)
+    base = simulate(trace, 30, BASELINE_PIPE).ipc
+    prop = simulate(trace, 30, PROPOSED_PIPE).ipc
+    assert prop <= base
+    assert prop / base > 0.80, (prop, base)
+    # and the proposed RF at 30 warps beats baseline at 10 warps
+    low = simulate(trace, 10, BASELINE_PIPE).ipc
+    assert prop > 1.2 * low
+
+
+def test_writeback_sensitivity_fig12():
+    """Fig. 12: IPC flat-ish up to 4 cycles of writeback delay at decent
+    occupancy, degrading beyond (scoreboard, no forwarding)."""
+    ipc = writeback_sensitivity(IMGVF_LIKE, 30, delays=(0, 2, 4, 8))
+    assert ipc[0] >= ipc[2] >= ipc[4] >= ipc[8] * 0.99
+    assert ipc[4] / ipc[0] > 0.8          # small impact up to 4 cycles
+    # low occupancy is much more sensitive (the Elevated/GICOV effect)
+    ipc_low = writeback_sensitivity(IMGVF_LIKE, 4, delays=(0, 8))
+    assert ipc_low[8] / ipc_low[0] < ipc[8] / ipc[0] + 1e-9
+
+
+def test_ipc_scales_are_sane():
+    trace = build_trace(IMGVF_LIKE)
+    r = simulate(trace, 30, BASELINE_PIPE)
+    # two schedulers x 32-thread warps -> max 64 thread-instr/cycle
+    assert 0 < r.ipc <= 64

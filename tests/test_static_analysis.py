@@ -1,0 +1,162 @@
+"""Static framework tests: range analysis (jaxpr + e-SSA Fig. 8),
+precision tuning, end-to-end kernel compression (Fig. 7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compress import compress_kernel
+from repro.core.essa import figure8_program, merged_ranges, solve_ranges
+from repro.core.precision_tuning import (
+    QuantizedKernel,
+    tune_kernel,
+    tune_tensors,
+)
+from repro.core.quality import HIGH, PERFECT, QualitySpec, ssim
+from repro.core.range_analysis import Interval, analyze
+
+
+# -- Fig. 8 ---------------------------------------------------------------
+
+def test_figure8_sigma_refinement():
+    env = solve_ranges(figure8_program())
+    assert (env["k_t"].lo, env["k_t"].hi) == (0, 49)
+    assert (env["k_f"].lo, env["k_f"].hi) == (50, 99)
+
+
+def test_figure8_merged_bitwidths():
+    merged = merged_ranges(figure8_program())
+    assert merged["k"][1] == (7, False)           # [0, 99]
+    assert merged["b"][1] == (6, False)           # [0, 49]
+    assert merged["j"][1] == (7, False)           # [1, 99]
+    assert merged["a"][0].hi == 98
+
+
+# -- jaxpr interval analysis ----------------------------------------------
+
+def test_ranges_basic_arith():
+    def fn(t):
+        return (t + 2) * 3 - 1
+
+    rep = analyze(fn, jnp.zeros((8,), jnp.int32),
+                  input_ranges=[Interval(0, 9)])
+    out = rep.out_intervals[0]
+    assert (out.lo, out.hi) == (5, 32)
+
+
+def test_ranges_iota_mod_minimum():
+    def fn(tokens):
+        pos = jnp.arange(tokens.shape[-1])
+        return jnp.minimum(tokens % 64, pos)
+
+    rep = analyze(fn, jnp.zeros((128,), jnp.int32),
+                  input_ranges=[Interval(0, 100000)])
+    out = rep.out_intervals[0]
+    assert out.lo >= 0 and out.hi <= 127
+
+
+def test_ranges_router_topk():
+    def route(logits):
+        _, idx = jax.lax.top_k(logits, 6)
+        return idx
+
+    rep = analyze(route, jnp.zeros((4, 64), jnp.float32))
+    assert rep.out_intervals[0].bits() == (6, False)
+
+
+def test_ranges_scan_fixpoint():
+    def loop(x):
+        def body(c, _):
+            return jnp.minimum(c + 1, 10), c
+        c, ys = jax.lax.scan(body, jnp.int32(0), None, length=100)
+        return c
+
+    rep = analyze(loop, jnp.int32(0))
+    out = rep.out_intervals[0]
+    assert out.lo >= 0 and out.hi <= 10
+
+
+def test_ranges_unbounded_is_sound():
+    def fn(x):
+        return x * x                     # unbounded input
+
+    rep = analyze(fn, jnp.zeros((4,), jnp.int32))
+    assert rep.out_intervals[0].bits() is None
+
+
+# -- precision tuning -------------------------------------------------------
+
+def _stencil(t, p):
+    up = jnp.roll(t, 1, 0)
+    dn = jnp.roll(t, -1, 0)
+    return t + 0.1 * (up + dn - 2 * t) + 0.05 * p
+
+
+def test_tune_kernel_monotone_threshold():
+    key = jax.random.PRNGKey(0)
+    t = jax.random.uniform(key, (16, 16))
+    p = jax.random.uniform(jax.random.PRNGKey(1), (16, 16))
+    qk = QuantizedKernel(_stencil, t, p)
+    loose = tune_kernel(qk, [(t, p)], QualitySpec("deviation", 10.0))
+    tight = tune_kernel(qk, [(t, p)], QualitySpec("deviation", 0.01))
+    assert loose.mean_bits() <= tight.mean_bits()
+    # perfect threshold keeps everything at 32 bits for this kernel
+    perfect = tune_kernel(qk, [(t, p)], QualitySpec("deviation", 0.0))
+    assert all(b == 32 for b in perfect.formats.values())
+
+
+def test_tuned_formats_actually_meet_threshold():
+    key = jax.random.PRNGKey(0)
+    t = jax.random.uniform(key, (16, 16))
+    p = jax.random.uniform(jax.random.PRNGKey(1), (16, 16))
+    qk = QuantizedKernel(_stencil, t, p)
+    spec = QualitySpec("deviation", 5.0)
+    res = tune_kernel(qk, [(t, p)], spec)
+    ref = qk.run({}, t, p)
+    out = qk.run(res.formats, t, p)
+    assert spec.accepts(ref, out)
+
+
+def test_tune_tensors_assigns_smaller_to_tolerant():
+    key = jax.random.PRNGKey(0)
+    w1 = jax.random.normal(key, (32, 32)) * 0.1
+    w2 = jax.random.normal(jax.random.PRNGKey(1), (32, 8)) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 32))
+
+    def apply(ts):
+        return jnp.tanh(x @ ts["w1"]) @ ts["w2"]
+
+    res = tune_tensors(apply, {"w1": w1, "w2": w2},
+                       QualitySpec("deviation", 5.0))
+    assert all(b < 32 for b in res.formats.values())
+
+
+# -- quality metrics ---------------------------------------------------------
+
+def test_ssim_identity_and_noise():
+    img = jax.random.uniform(jax.random.PRNGKey(0), (32, 32))
+    assert float(ssim(img, img)) > 0.999
+    noisy = img + 0.5 * jax.random.normal(jax.random.PRNGKey(1), (32, 32))
+    assert float(ssim(img, noisy)) < 0.9
+
+
+# -- end-to-end Fig. 7 flow ---------------------------------------------------
+
+def test_compress_kernel_end_to_end():
+    def kernel(img, idx):
+        g = jnp.take(img.reshape(-1), idx % img.size)
+        blur = _stencil(img, img)
+        return blur.sum() + g.sum()
+
+    img = jax.random.uniform(jax.random.PRNGKey(0), (16, 16))
+    idx = jnp.arange(32, dtype=jnp.int32)
+    kc = compress_kernel(
+        "demo", kernel, [(img, idx)], QualitySpec("deviation", 10.0),
+        input_ranges=[None, Interval(0, 31)],
+    )
+    assert kc.packed_pressure < kc.baseline_pressure
+    assert kc.pressure_reduction > 0.2
+    assert kc.allocation.total_slices > 0
+    # the indirection table encodes to 32-bit words
+    for w in kc.allocation.table_words():
+        assert 0 <= w < 2**32

@@ -1,0 +1,78 @@
+"""End-to-end system behaviour: the paper's flow from analysis to
+deployment artifacts, plus cross-layer consistency checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.compress import plan_tensors
+from repro.core.occupancy import decode_residency, occupancy
+from repro.core.quality import QualitySpec
+from repro.core.tensor_store import pack_tree, tree_bytes, unpack_tree
+from repro.models.lm import LM
+
+
+def test_end_to_end_pack_train_consistency():
+    """Packing weights through the tensor store and unpacking must leave
+    the loss within the format's quantization error."""
+    cfg = get_config("qwen3_8b").reduced()
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.arange(64, dtype=jnp.int32).reshape(2, 32)
+        % cfg.vocab_size,
+        "labels": jnp.ones((2, 32), jnp.int32),
+    }
+    base = float(lm.loss(params, batch))
+    packed = pack_tree(params, lambda p, l: 16 if l.ndim >= 2 else None)
+    pb, lb = tree_bytes(packed)
+    assert pb < 0.6 * lb                       # ~2x footprint reduction
+    restored = unpack_tree(packed)
+    quant = float(lm.loss(restored, batch))
+    assert abs(quant - base) / base < 0.02
+
+
+def test_plan_feeds_store_and_residency():
+    """CompressionPlan -> packed store -> residency planner chain."""
+    cfg = get_config("qwen3_8b").reduced()
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.zeros((2, 16), jnp.int32),
+        "labels": jnp.zeros((2, 16), jnp.int32),
+    }
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    flat = {f"p{i}": l for i, l in enumerate(leaves) if l.ndim >= 2}
+
+    def apply_fn(ts):
+        rebuilt = [
+            ts.get(f"p{i}", l) for i, l in enumerate(leaves)
+        ]
+        return lm.loss(jax.tree_util.tree_unflatten(treedef, rebuilt),
+                       batch)
+
+    plan = plan_tensors(apply_fn, flat, QualitySpec("deviation", 2.0))
+    ratio = plan.footprint_ratio(flat)
+    assert ratio < 0.8                          # tuning found narrow formats
+    # narrower state -> more resident sequences, monotone
+    full = get_config("qwen3_8b")
+    r_full = decode_residency(full.n_params() * 2 // 8,
+                              full.kv_bytes_per_token(16) // 8, 4096)
+    r_packed = decode_residency(
+        int(full.n_params() * 2 * ratio) // 8,
+        full.kv_bytes_per_token(16) // 8, 4096)
+    assert r_packed.max_sequences >= r_full.max_sequences
+
+
+def test_occupancy_model_agrees_with_residency_shape():
+    """The GPU and TPU occupancy models agree qualitatively: halving the
+    per-context footprint at least doubles nothing-else-limited
+    occupancy, and a second resource (smem / weights) caps it."""
+    gpu_a = occupancy(52, 10)
+    gpu_b = occupancy(26, 10)
+    assert gpu_b.blocks >= 2 * gpu_a.blocks
+    tpu_a = decode_residency(2 * 10**9, 200_000, 4096)
+    tpu_b = decode_residency(2 * 10**9, 100_000, 4096)
+    assert tpu_b.max_sequences >= 2 * tpu_a.max_sequences - 1
