@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# CPU-only CI: tier-1 suite + 8-device distributed smoke.
+#
+#   scripts/ci.sh            # everything
+#   scripts/ci.sh --smoke    # just the 8-device mesh-matrix smoke
+#
+# Fails on any collection error (the explicit --collect-only pass turns
+# a silently-skipped broken module into a hard failure) and on any
+# mesh-matrix cell, so a regression in either compat API path
+# (0.4.x thread_resources / >=0.5 abstract mesh) is caught without
+# hardware.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+smoke_only=false
+[[ "${1:-}" == "--smoke" ]] && smoke_only=true
+
+if ! $smoke_only; then
+    echo "== collection check =="
+    python -m pytest -q --collect-only >/dev/null
+
+    echo "== tier-1 suite =="
+    # the mesh matrix runs as the explicit smoke step below; deselect
+    # its pytest twin so CI doesn't pay the slowest stage twice
+    python -m pytest -x -q \
+        --deselect tests/test_distributed.py::test_dryrun_mesh_matrix
+fi
+
+echo "== 8-device distributed smoke (mesh matrix) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m repro.launch.dryrun --mesh-matrix
+
+echo "CI green"

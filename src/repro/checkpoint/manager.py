@@ -36,11 +36,13 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import compat
+
 from repro.core.tensor_store import PackedTensor, is_packed
 
 
 def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
-    flat, treedef = jax.tree_util.tree_flatten_with_path(
+    flat, treedef = compat.tree_flatten_with_path(
         tree, is_leaf=is_packed
     )
     out = []
@@ -63,7 +65,7 @@ class CheckpointManager:
     # -- public ---------------------------------------------------------------
     def save(self, step: int, tree: Any, blocking: bool = True) -> str:
         """Snapshot to host now; write (a)synchronously; return final path."""
-        host_tree = jax.tree_util.tree_map(
+        host_tree = compat.tree_map(
             lambda l: np.asarray(jax.device_get(l)), tree, is_leaf=is_packed
         ) if not _tree_has_packed(tree) else _device_get_packed(tree)
         final = self._step_dir(step)
@@ -118,11 +120,11 @@ class CheckpointManager:
                 ))
             else:
                 leaves.append(arr)
-        treedef = jax.tree_util.tree_structure(
+        treedef = compat.tree_structure(
             json.loads(manifest["treedef_json"]),
             is_leaf=lambda x: x is None,
         )
-        return step, jax.tree_util.tree_unflatten(treedef, leaves)
+        return step, compat.tree_unflatten(treedef, leaves)
 
     # -- internals --------------------------------------------------------------
     def _step_dir(self, step: int) -> str:
@@ -147,7 +149,7 @@ class CheckpointManager:
             else:
                 payload[key] = np.asarray(leaf)
                 leaves_meta.append({"key": key, "packed": False})
-        skeleton = jax.tree_util.tree_map(
+        skeleton = compat.tree_map(
             lambda _: None, host_tree, is_leaf=is_packed
         )
         manifest = {
@@ -179,7 +181,7 @@ class CheckpointManager:
 def _tree_has_packed(tree) -> bool:
     return any(
         is_packed(l)
-        for l in jax.tree_util.tree_leaves(tree, is_leaf=is_packed)
+        for l in compat.tree_leaves(tree, is_leaf=is_packed)
     )
 
 
@@ -190,7 +192,7 @@ def _device_get_packed(tree):
                 l, data=np.asarray(jax.device_get(l.data))
             )
         return np.asarray(jax.device_get(l))
-    return jax.tree_util.tree_map(get, tree, is_leaf=is_packed)
+    return compat.tree_map(get, tree, is_leaf=is_packed)
 
 
 def _to_jsonable(tree):

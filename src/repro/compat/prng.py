@@ -1,0 +1,37 @@
+"""PRNG and donation helpers through the seam.
+
+The substrate standardizes on raw uint32 keys (``jax.random.PRNGKey``)
+rather than new-style typed keys: checkpoints serialize key arrays as
+plain uint32 leaves and the error-feedback/optimizer tree zips assume
+ordinary ndarray leaves.  When typed keys become mandatory the switch
+happens here, not at forty call sites.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def prng_key(seed) -> jax.Array:
+    return jax.random.PRNGKey(seed)
+
+
+def prng_split(key, num: int = 2):
+    return jax.random.split(key, num)
+
+
+def prng_fold_in(key, data):
+    return jax.random.fold_in(key, data)
+
+
+def jit(fn=None, *, donate_argnums=(), **kwargs):
+    """``jax.jit`` with donation routed through the seam.
+
+    Donation kwargs are the part of the jit surface that has churned
+    (``donate_argnums``/``donate_argnames``); call sites pass
+    ``donate_argnums`` and a future rename is absorbed here.
+    """
+    if donate_argnums != ():        # 0 is a valid argnum, keep it
+        kwargs["donate_argnums"] = donate_argnums
+    if fn is None:
+        return lambda f: jax.jit(f, **kwargs)
+    return jax.jit(fn, **kwargs)

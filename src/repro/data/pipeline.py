@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import prng_fold_in, prng_key
+
 
 @dataclasses.dataclass(frozen=True)
 class TokenBatch:
@@ -48,9 +50,9 @@ class SyntheticTokens:
         return self.global_batch // self.host_count
 
     def _key(self, step: int):
-        k = jax.random.PRNGKey(self.seed)
-        k = jax.random.fold_in(k, step)
-        return jax.random.fold_in(k, self.host_index)
+        k = prng_key(self.seed)
+        k = prng_fold_in(k, step)
+        return prng_fold_in(k, self.host_index)
 
     def batch_at(self, step: int) -> TokenBatch:
         """Materialize this host's shard of global step ``step``."""

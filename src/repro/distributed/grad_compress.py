@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size, tree_flatten, tree_map
 from repro.core import bitpack
 from repro.core.formats import FLOAT_FORMATS, decode_float, encode_float
 
@@ -55,7 +56,7 @@ def ring_reduce_codes(
     Call inside shard_map with the DP axis manual. Requires len(x) to be
     divisible by D*32.
     """
-    d = jax.lax.axis_size(axis_name)
+    d = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     n = x.shape[0]
     chunk = n // d
@@ -108,7 +109,7 @@ def compressed_psum(
     """Drop-in psum: exact f32 psum when bits is None/32."""
     if not bits or bits >= 32:
         return jax.lax.psum(x, axis_name)
-    d = jax.lax.axis_size(axis_name)
+    d = axis_size(axis_name)
     n = x.size
     quantum = d * bitpack.GROUP
     pad = (-n) % quantum
@@ -133,7 +134,7 @@ def apply_error_feedback(
         q = decode_float(encode_float(gf, fmt), fmt)
         return q.astype(g.dtype), gf - q
 
-    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_g, treedef = tree_flatten(grads)
     flat_r = treedef.flatten_up_to(residual)
     pairs = [leaf(g, r) for g, r in zip(flat_g, flat_r)]
     return (treedef.unflatten([p[0] for p in pairs]),
@@ -141,6 +142,4 @@ def apply_error_feedback(
 
 
 def init_error_feedback(params):
-    return jax.tree_util.tree_map(
-        lambda p: jnp.zeros(p.shape, jnp.float32), params
-    )
+    return tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

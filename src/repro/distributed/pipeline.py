@@ -1,5 +1,6 @@
 """Pipeline parallelism: GPipe-style microbatch pipelining over a
-"stage" mesh axis using ``jax.lax.ppermute`` inside shard_map.
+"stage" mesh axis using ``jax.lax.ppermute`` inside the compat
+``shard_map`` seam (identical program on either jax generation).
 
 The production meshes are DP x TP; PP is the third axis large clusters
 add when a model's layers exceed one pod's HBM (e.g. arctic-class models
@@ -26,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map, tree_map
+
 
 def pipeline_apply(
     block_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
@@ -40,7 +43,7 @@ def pipeline_apply(
     def stage_program(params, xs):
         # params: this stage's slice (leading dim 1 stripped);
         # xs: the full microbatch stream, only stage 0 consumes it.
-        params = jax.tree_util.tree_map(lambda a: a[0], params)
+        params = tree_map(lambda a: a[0], params)
         sid = jax.lax.axis_index(axis)
         n_micro = xs.shape[0]
         mb_shape = xs.shape[1:]
@@ -83,12 +86,14 @@ def pipeline_apply(
                             jnp.zeros_like(outputs))
         return jax.lax.psum(outputs, axis)
 
-    fn = jax.shard_map(
+    # the masked psum defeats the replication checker on every jax
+    # generation, hence check_replication=False through the seam
+    fn = shard_map(
         stage_program,
         mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
+        check_replication=False,
     )
     return fn(stage_params, x)
 

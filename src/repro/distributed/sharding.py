@@ -5,37 +5,33 @@ The production mesh axes are ("data", "model") single-pod and
 ("pod", "data") jointly. Rules map parameter-path regexes to specs, so the
 same model code serves TP (replicated weights across DP) and ZeRO
 (weights sharded over DP) modes. ``constrain`` is a mesh-aware
-``with_sharding_constraint`` that degrades to a no-op outside jit/mesh.
+``with_sharding_constraint`` that degrades to a no-op outside any mesh.
+
+All mesh-context queries go through ``repro.compat`` — the one layer
+that knows whether this jax serves them from the abstract mesh (>=0.5)
+or the legacy ``thread_resources`` context (0.4.x).
 """
 from __future__ import annotations
 
 import re
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
-import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import (
+    current_mesh_axis_names,
+    current_mesh_axis_sizes,
+    with_sharding_constraint,
+)
+
 DATA_AXES = ("pod", "data")        # DP shards over both when present
-
-
-def _mesh_axis_names() -> Tuple[str, ...]:
-    env = jax.sharding.get_abstract_mesh()
-    if env is not None and env.axis_names:
-        return tuple(env.axis_names)
-    # legacy `with mesh:` context (what the launcher uses)
-    from jax._src.mesh import thread_resources
-    phys = thread_resources.env.physical_mesh
-    if not phys.empty:
-        return tuple(phys.axis_names)
-    return ()
 
 
 def resolve_axes(axes: Sequence[Any]) -> P:
     """Translate logical axis entries to a PartitionSpec valid for the
     current mesh: "data" expands to ("pod", "data") on multi-pod meshes;
     axis names absent from the mesh drop to None (replicated)."""
-    names = _mesh_axis_names()
+    names = current_mesh_axis_names()
     out = []
     for ax in axes:
         if ax is None:
@@ -51,22 +47,15 @@ def resolve_axes(axes: Sequence[Any]) -> P:
     return P(*out)
 
 
-def _axis_sizes() -> dict:
-    env = jax.sharding.get_abstract_mesh()
-    if env is not None and env.axis_names:
-        return dict(zip(env.axis_names, env.axis_sizes))
-    from jax._src.mesh import thread_resources
-    phys = thread_resources.env.physical_mesh
-    if not phys.empty:
-        return dict(zip(phys.axis_names, phys.devices.shape))
-    return {}
-
-
-def drop_indivisible(spec: P, shape: Tuple[int, ...]) -> P:
+def drop_indivisible(spec: P, shape: Tuple[int, ...],
+                     axis_sizes: Optional[Dict[str, int]] = None) -> P:
     """Replicate any dimension whose size doesn't divide its shard count —
     jit in_shardings (unlike sharding constraints) reject uneven shards.
-    The fallbacks are always small tensors (odd vocabs, batch=1 decode)."""
-    sizes = _axis_sizes()
+    The fallbacks are always small tensors (odd vocabs, batch=1 decode).
+    ``axis_sizes`` overrides the current-mesh query (unit-testable
+    without a multi-device mesh)."""
+    sizes = (axis_sizes if axis_sizes is not None
+             else current_mesh_axis_sizes())
     out = []
     for dim, ax in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
         if ax is None:
@@ -81,14 +70,23 @@ def drop_indivisible(spec: P, shape: Tuple[int, ...]) -> P:
 
 
 def constrain(x, axes: Sequence[Any]):
-    """with_sharding_constraint against logical axes; no-op if no mesh."""
-    names = _mesh_axis_names()
+    """with_sharding_constraint against logical axes; no-op outside any
+    mesh.  Inside a mesh, errors propagate: the old blanket
+    ``except: return x`` turned every bad spec into a silently
+    replicated tensor — a sharded run that compiles and trains but
+    holds full copies everywhere looks healthy until it OOMs at scale.
+    The one benign mismatch (rank) is checked explicitly so the error
+    names the offending spec."""
+    names = current_mesh_axis_names()
     if not names:
         return x
-    try:
-        return jax.lax.with_sharding_constraint(x, resolve_axes(axes))
-    except (ValueError, RuntimeError):
-        return x
+    spec = resolve_axes(axes)
+    ndim = getattr(x, "ndim", None)
+    if ndim is not None and len(spec) > ndim:
+        raise ValueError(
+            f"constrain: spec {spec} (rank {len(spec)}) does not fit "
+            f"tensor of shape {getattr(x, 'shape', ())}")
+    return with_sharding_constraint(x, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -152,7 +150,7 @@ def spec_for(path: str, shape: Tuple[int, ...], mode: str = "tp",
         # ZeRO: additionally shard a free dim over DP — the first dim the
         # DP degree divides (the layer stack when L divides, else e.g.
         # the expert dim: arctic's L=35 doesn't divide 16 but E=128 does).
-        sizes = _axis_sizes()
+        sizes = current_mesh_axis_sizes()
         dp = 1
         for a in DATA_AXES:
             dp *= sizes.get(a, 1)

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import (jit, mesh_context, path_str, prng_key,
+                          tree_map_with_path)
 from repro.distributed.sharding import (drop_indivisible,
                                         resolve_axes, spec_for)
 from repro.models.config import ModelConfig, ShapeConfig
@@ -45,21 +47,16 @@ class Program:
         return self.fn.lower(*self.in_specs)
 
 
-def _path_str(path) -> str:
-    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                    for p in path)
-
-
 def _tree_shardings(tree, mesh: Mesh, mode: str):
     def leaf_spec(path, leaf):
         return NamedSharding(
-            mesh, spec_for(_path_str(path), leaf.shape, mode)
+            mesh, spec_for(path_str(path), leaf.shape, mode)
         )
-    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+    return tree_map_with_path(leaf_spec, tree)
 
 
 def _batch_shardings(specs: Dict, mesh: Mesh) -> Dict:
-    with mesh:
+    with mesh_context(mesh):
         out = {}
         for k, v in specs.items():
             if v.ndim >= 1:
@@ -77,7 +74,7 @@ def _state_shardings(state, mesh: Mesh) -> Any:
     def leaf_spec(path, leaf):
         keys = [str(getattr(p, "key", "")) for p in path]
         nd = leaf.ndim
-        with mesh:
+        with mesh_context(mesh):
             if "len" in keys or "clen" in keys or nd <= 1:
                 return NamedSharding(mesh, P())
             def ns(axes):
@@ -94,7 +91,7 @@ def _state_shardings(state, mesh: Mesh) -> Any:
             if "h" in keys:                         # (...,B,lw)
                 return ns((None,) * (nd - 2) + ("data", "model"))
             return NamedSharding(mesh, P())
-    return jax.tree_util.tree_map_with_path(leaf_spec, state)
+    return tree_map_with_path(leaf_spec, state)
 
 
 def build_programs(
@@ -105,9 +102,9 @@ def build_programs(
     opt_cfg: Optional[AdamWConfig] = None,
 ) -> Program:
     lm = LM(cfg)
-    rng_spec = jax.random.PRNGKey(0)
+    rng_spec = prng_key(0)
     abstract_params = jax.eval_shape(lm.init, rng_spec)
-    with mesh:
+    with mesh_context(mesh):
         p_shard = _tree_shardings(abstract_params, mesh, mode)
     input_specs = lm.input_specs(shape)
     b_shard = _batch_shardings(input_specs, mesh)
@@ -120,7 +117,7 @@ def build_programs(
         abstract_opt = jax.eval_shape(
             functools.partial(adamw_init, cfg=ocfg), abstract_params
         )
-        with mesh:
+        with mesh_context(mesh):
             o_shard = _tree_shardings(abstract_opt, mesh, mode)
             rep = NamedSharding(mesh, P())
 
@@ -132,7 +129,7 @@ def build_programs(
             )
             return params, opt_state, loss
 
-        fn = jax.jit(
+        fn = jit(
             train_step,
             in_shardings=(p_shard, o_shard, b_shard, rep),
             out_shardings=(p_shard, o_shard, rep),
@@ -143,7 +140,7 @@ def build_programs(
         return Program(f"{cfg.name}:{shape.name}:train", fn, specs, lm)
 
     if shape.kind == "prefill":
-        with mesh:
+        with mesh_context(mesh):
             lshape = (shape.global_batch, 1, cfg.vocab_size)
             out_shard = (
                 NamedSharding(mesh, drop_indivisible(
@@ -154,7 +151,7 @@ def build_programs(
         def prefill_step(params, batch):
             return lm.prefill(params, batch)
 
-        fn = jax.jit(
+        fn = jit(
             prefill_step,
             in_shardings=(p_shard, b_shard),
             out_shardings=out_shard,
@@ -169,7 +166,7 @@ def build_programs(
         shape.global_batch, _state_seq_len(cfg, shape), abstract=True
     )
     s_shard = _state_shardings(abstract_state, mesh)
-    with mesh:
+    with mesh_context(mesh):
         lshape = (shape.global_batch, 1, cfg.vocab_size)
         logits_shard = NamedSharding(
             mesh, drop_indivisible(
@@ -178,7 +175,7 @@ def build_programs(
     def serve_step(params, state, tokens):
         return lm.decode_step(params, state, tokens)
 
-    fn = jax.jit(
+    fn = jit(
         serve_step,
         in_shardings=(p_shard, s_shard, b_shard["tokens"]),
         out_shardings=(logits_shard, s_shard),

@@ -57,9 +57,10 @@ def main() -> None:
         metrics = Trainer(cfg, tc).run(install_signals=True)
     else:
         # full-scale path: production mesh + sharded step programs
+        from repro.compat import mesh_context
         from repro.launch.mesh import make_production_mesh
         mesh = make_production_mesh(multi_pod=args.multi_pod)
-        with mesh:
+        with mesh_context(mesh):
             metrics = Trainer(cfg, tc).run(install_signals=True)
 
     print(f"final loss: {metrics['final_loss']:.4f}  "

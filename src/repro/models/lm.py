@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 from repro.core import bitpack
 from repro.distributed.sharding import constrain
 from repro.models import blocks as B
@@ -125,7 +127,7 @@ class LM:
             x, _ = jax.lax.scan(jax.checkpoint(body), x, stacked)
             return x
         inner = n_layers // g
-        grouped = jax.tree_util.tree_map(
+        grouped = compat.tree_map(
             lambda a: a.reshape((g, inner) + a.shape[1:]), stacked)
 
         @jax.checkpoint
@@ -162,15 +164,15 @@ class LM:
             def body(h, lp):
                 for i in range(cfg.pattern_rec):
                     h = B.rglru_apply(
-                        jax.tree_util.tree_map(lambda a: a[i], lp["rec"]),
+                        compat.tree_map(lambda a: a[i], lp["rec"]),
                         h, cfg)
                     h = B.mlp_apply(
-                        jax.tree_util.tree_map(lambda a: a[i], lp["mlp"]),
+                        compat.tree_map(lambda a: a[i], lp["mlp"]),
                         h, cfg)
                 h = B.attention_apply(lp["attn"], h, cfg, positions,
                                       causal=True, window=cfg.attn_window)
                 h = B.mlp_apply(
-                    jax.tree_util.tree_map(
+                    compat.tree_map(
                         lambda a: a[cfg.pattern_rec], lp["mlp"]),
                     h, cfg)
                 h = constrain(h, ("data", None, None))
@@ -388,10 +390,10 @@ class LM:
                 for i in range(cfg.pattern_rec):
                     st = {"conv": rec["conv"][i], "h": rec["h"][i]}
                     h, st = B.rglru_decode(
-                        jax.tree_util.tree_map(lambda a: a[i], lp["rec"]),
+                        compat.tree_map(lambda a: a[i], lp["rec"]),
                         h, cfg, st)
                     h = B.mlp_apply(
-                        jax.tree_util.tree_map(lambda a: a[i], lp["mlp"]),
+                        compat.tree_map(lambda a: a[i], lp["mlp"]),
                         h, cfg)
                     new_rec["conv"].append(st["conv"])
                     new_rec["h"].append(st["h"])
@@ -399,7 +401,7 @@ class LM:
                 h, st = B.attention_decode(lp["attn"], h, cfg, st, positions,
                                            window=cfg.attn_window)
                 h = B.mlp_apply(
-                    jax.tree_util.tree_map(
+                    compat.tree_map(
                         lambda a: a[cfg.pattern_rec], lp["mlp"]),
                     h, cfg)
                 return h, (

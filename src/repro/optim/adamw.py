@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 from repro.core import bitpack
 from repro.core.formats import FLOAT_FORMATS, decode_float, encode_float
 
@@ -83,9 +85,9 @@ def adamw_init(params, cfg: AdamWConfig) -> Dict[str, Any]:
         return _pack_moment(z, bits)
 
     return {
-        "m": jax.tree_util.tree_map(
+        "m": compat.tree_map(
             lambda p: zeros_packed(p, cfg.m_bits), params),
-        "v": jax.tree_util.tree_map(          # holds sqrt(v) when packed
+        "v": compat.tree_map(          # holds sqrt(v) when packed
             lambda p: zeros_packed(p, cfg.v_bits), params),
         "count": jnp.zeros((), jnp.int32),
     }
@@ -101,7 +103,7 @@ def adamw_update(
 
     gnorm = jnp.sqrt(sum(
         jnp.sum(jnp.square(g.astype(jnp.float32)))
-        for g in jax.tree_util.tree_leaves(grads)
+        for g in compat.tree_leaves(grads)
     ))
     scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
 
@@ -129,7 +131,7 @@ def adamw_update(
             _pack_moment(jnp.sqrt(v) if v_packed else v, cfg.v_bits),
         )
 
-    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_p, treedef = compat.tree_flatten(params)
     flat_g = treedef.flatten_up_to(grads)
     flat_m = treedef.flatten_up_to(opt_state["m"])
     flat_v = treedef.flatten_up_to(opt_state["v"])

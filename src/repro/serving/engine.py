@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import jit, prng_key
 from repro.core.occupancy import TPU_V5E, TPUChipConfig, decode_residency
 from repro.models.config import ModelConfig
 from repro.models.lm import LM
@@ -54,7 +55,7 @@ class ServeEngine:
 
     def __post_init__(self):
         self.lm = LM(self.cfg)
-        self.params = self.lm.init(jax.random.PRNGKey(0))
+        self.params = self.lm.init(prng_key(0))
         kv_bits = self.cfg.compression.kv_bits or 16
         weight_bytes = self.cfg.n_params() * (
             (self.cfg.compression.weight_bits or 16) // 8)
@@ -75,7 +76,7 @@ class ServeEngine:
         self._active: Dict[int, Request] = {}
         self._queue: List[Request] = []
         self._next_rid = 0
-        self._step = jax.jit(self.lm.decode_step, donate_argnums=(1,))
+        self._step = jit(self.lm.decode_step, donate_argnums=(1,))
         self._last_tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
         self._pending_prefill: Dict[int, List[int]] = {}
         self.ticks = 0
@@ -128,7 +129,7 @@ class ServeEngine:
         nxt = (jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
                if self.greedy else
                jax.random.categorical(
-                   jax.random.PRNGKey(self.ticks), logits[:, 0, :]
+                   prng_key(self.ticks), logits[:, 0, :]
                ).astype(jnp.int32))
         nxt = np.asarray(nxt)
         emitted = 0

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.compat import jit, prng_key, tree_map
 from repro.data import SyntheticTokens
 from repro.distributed.grad_compress import (
     apply_error_feedback,
@@ -55,12 +56,12 @@ def make_train_step(lm: LM, opt_cfg: AdamWConfig, tc: TrainConfig):
                 l, g = jax.value_and_grad(loss_fn)(params, mb)
                 return (
                     acc[0] + l / tc.microbatches,
-                    jax.tree_util.tree_map(
+                    tree_map(
                         lambda a, b: a + b / tc.microbatches, acc[1], g),
                 ), None
-            zero = jax.tree_util.tree_map(
+            zero = tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            mbs = jax.tree_util.tree_map(
+            mbs = tree_map(
                 lambda x: x.reshape((tc.microbatches,
                                      x.shape[0] // tc.microbatches)
                                     + x.shape[1:]),
@@ -119,7 +120,7 @@ class Trainer:
 
     def run(self, resume: bool = True,
             install_signals: bool = False) -> Dict[str, Any]:
-        rng = jax.random.PRNGKey(self.tc.seed)
+        rng = prng_key(self.tc.seed)
         params = self.lm.init(rng)
         opt_state = adamw_init(params, self.opt_cfg)
         ef = (init_error_feedback(params)
@@ -128,12 +129,12 @@ class Trainer:
 
         if resume and self.ckpt and self.ckpt.latest_step() is not None:
             step, tree = self.ckpt.restore()
-            params = jax.tree_util.tree_map(jnp.asarray, tree["params"])
-            opt_state = jax.tree_util.tree_map(jnp.asarray, tree["opt"])
+            params = tree_map(jnp.asarray, tree["params"])
+            opt_state = tree_map(jnp.asarray, tree["opt"])
             self.data.load_state_dict(tree["data"])
             start_step = step + 1
 
-        step_fn = jax.jit(
+        step_fn = jit(
             make_train_step(self.lm, self.opt_cfg, self.tc),
             donate_argnums=(0, 1, 2),
         )

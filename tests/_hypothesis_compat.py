@@ -1,0 +1,154 @@
+"""`hypothesis` fallback with the same ``@given``/``@settings``/``st``
+surface, used when hypothesis is not installed so the property tests
+degrade to deterministic fixed-seed example sampling instead of
+erroring at collection.
+
+Real hypothesis is preferred whenever importable (shrinking, a real
+database, coverage-guided generation).  The fallback:
+
+  * samples each argument from a seed derived from the test name, so
+    runs are reproducible and failures name the example index;
+  * biases integers toward range endpoints and floats toward special
+    values (0, subnormals, huge magnitudes) — the cheap 80% of what
+    hypothesis' generators buy;
+  * honors ``max_examples`` from ``@settings`` and ignores the rest.
+
+Usage in tests::
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    USING_REAL_HYPOTHESIS = True
+except ImportError:
+    USING_REAL_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import math
+    import zlib
+
+    import numpy as _np
+
+    _DEFAULT_MAX_EXAMPLES = 100
+
+    class _Strategy:
+        def __init__(self, sample, desc):
+            self._sample = sample
+            self._desc = desc
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+        def __repr__(self):
+            return self._desc
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            lo, hi = int(min_value), int(max_value)
+
+            def sample(rng):
+                r = rng.random()
+                if r < 0.08:
+                    return lo
+                if r < 0.16:
+                    return hi
+                if r < 0.24 and lo <= 0 <= hi:
+                    return 0
+                return int(rng.integers(lo, hi, endpoint=True))
+
+            return _Strategy(sample, f"integers({lo}, {hi})")
+
+        @staticmethod
+        def floats(allow_nan=True, allow_infinity=True, width=64,
+                   min_value=None, max_value=None):
+            f_dtype = _np.float32 if width == 32 else _np.float64
+            i_dtype = _np.uint32 if width == 32 else _np.uint64
+            bits = 32 if width == 32 else 64
+            bounded = min_value is not None or max_value is not None
+
+            def sample(rng):
+                if bounded:
+                    # rejection sampling on bit patterns may never hit a
+                    # narrow interval; draw inside the bounds instead
+                    lo = min_value if min_value is not None else -1e308
+                    hi = max_value if max_value is not None else 1e308
+                    r = rng.random()
+                    if r < 0.1:
+                        return float(f_dtype(lo))
+                    if r < 0.2:
+                        return float(f_dtype(hi))
+                    return float(f_dtype(lo + (hi - lo) * rng.random()))
+                # random bit patterns cover the full float lattice
+                # (subnormals, both zeros, all exponents) uniformly
+                while True:
+                    raw = rng.integers(0, 2 ** bits, dtype=i_dtype)
+                    v = float(_np.asarray(raw, i_dtype).view(f_dtype)[()])
+                    if not allow_nan and math.isnan(v):
+                        continue
+                    if not allow_infinity and math.isinf(v):
+                        continue
+                    return v
+
+            return _Strategy(sample, f"floats(width={width})")
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+
+            def sample(rng):
+                return elems[int(rng.integers(0, len(elems)))]
+
+            return _Strategy(sample, f"sampled_from({elems!r})")
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size, endpoint=True))
+                return [elements.sample(rng) for _ in range(n)]
+
+            return _Strategy(
+                sample, f"lists({elements!r}, {min_size}..{max_size})")
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)),
+                             "booleans()")
+
+    st = _StrategiesModule()
+
+    def given(*strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = _np.random.default_rng(seed)
+                for i in range(n):
+                    example = tuple(s.sample(rng) for s in strategies)
+                    try:
+                        fn(*args, *example, **kwargs)
+                    except Exception:
+                        print(f"Falsifying example "
+                              f"(#{i}, seed={seed}): {example!r}")
+                        raise
+            # hide the sampled parameters from pytest's fixture
+            # resolution, as real hypothesis does
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+        return decorate
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+        return decorate
+
+__all__ = ["given", "settings", "st", "USING_REAL_HYPOTHESIS"]
