@@ -48,18 +48,37 @@ def bench_micro() -> List[Tuple[str, float, str]]:
             f"{n_bytes / (us * 1e-6) / 1e9:.2f}GB/s",
         ))
 
-    # fused packed matmul vs dense (f32) matmul
-    m, k, n, bits = 128, 1024, 1024, 16
+    # fused packed matmul vs dense (f32) matmul, per Table 3 width, with
+    # the per-call weight-read bytes (the bits/32 saving the fused kernel
+    # realizes on hardware)
+    m, k, n = 128, 1024, 1024
     a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
     w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.1)
-    wp = R.pack_ref(w, bits)
-    pmm = jax.jit(lambda a_, p_: R.packed_matmul_ref(a_, p_, bits, n))
-    us_p = _time(pmm, a, wp) * 1e6
     dense = jax.jit(lambda a_, w_: a_ @ w_)
     us_d = _time(dense, a, w) * 1e6
-    rows.append(("micro.packed_matmul_af16", us_p,
-                 f"dense_ratio={us_p / us_d:.2f}"))
-    rows.append(("micro.dense_matmul_f32", us_d, ""))
+    for bits in (8, 16, 24):
+        wp = R.pack_ref(w, bits)
+        pmm = jax.jit(
+            lambda a_, p_, b=bits: R.packed_matmul_ref(a_, p_, b, n))
+        us_p = _time(pmm, a, wp) * 1e6
+        rows.append((
+            f"micro.packed_matmul_af{bits}", us_p,
+            f"dense_ratio={us_p / us_d:.2f};wbytes={wp.size * 4}",
+        ))
+    rows.append(("micro.dense_matmul_f32", us_d, f"wbytes={w.size * 4}"))
+
+    # transposed orientation (the tied-unembed spec: contract over the
+    # packed axis), same geometry
+    wt = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32) * 0.1)
+    for bits in (8, 16):
+        wtp = R.pack_ref(wt, bits)
+        pmmt = jax.jit(
+            lambda a_, p_, b=bits: R.packed_matmul_ref(a_, p_, b, n, True))
+        us_t = _time(pmmt, a, wtp) * 1e6
+        rows.append((
+            f"micro.packed_matmul_t_af{bits}", us_t,
+            f"dense_ratio={us_t / us_d:.2f};wbytes={wtp.size * 4}",
+        ))
 
     # packed KV decode step vs unpacked
     b, h, hkv, d, s = 4, 16, 4, 128, 2048

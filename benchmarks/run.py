@@ -18,6 +18,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks.micro import bench_micro
+    from benchmarks.packed_path import bench_packed_path
     from benchmarks.paper_suite import (
         bench_area_table,
         bench_fig9_pressure,
@@ -38,6 +39,7 @@ def main() -> None:
         "fig12": bench_fig12_writeback,
         "area": bench_area_table,
         "micro": bench_micro,
+        "packed_path": bench_packed_path,
         "residency": bench_residency,
         "perf": bench_perf,
         "roofline": bench_roofline,

@@ -26,6 +26,27 @@ if ! $smoke_only; then
     # its pytest twin so CI doesn't pay the slowest stage twice
     python -m pytest -x -q \
         --deselect tests/test_distributed.py::test_dryrun_mesh_matrix
+
+    echo "== benchmark smoke (micro + perf + packed path) =="
+    # packed_path runs the fused kernel in Pallas interpret mode for the
+    # parity row and (re)writes BENCH_packed_path.json as a CI artifact
+    # (removed first so a stale copy can't mask a bench that stopped
+    # writing it). The CSV is always echoed — even when run.py exits
+    # nonzero — so the rows that did succeed reach the CI log; ERROR:
+    # rows or a nonzero exit fail the build.
+    rm -f BENCH_packed_path.json
+    set +e
+    bench_csv=$(python -m benchmarks.run --only micro,perf,packed_path)
+    bench_rc=$?
+    set -e
+    printf '%s\n' "$bench_csv"
+    if [ "$bench_rc" -ne 0 ] \
+        || printf '%s\n' "$bench_csv" | grep -q "ERROR:"; then
+        echo "benchmark smoke failed: ERROR rows present" >&2
+        exit 1
+    fi
+    test -f BENCH_packed_path.json || {
+        echo "BENCH_packed_path.json artifact missing" >&2; exit 1; }
 fi
 
 echo "== 8-device distributed smoke (mesh matrix) =="

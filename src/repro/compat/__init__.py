@@ -24,6 +24,11 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat.pallas import (
+    default_kernel_mode,
+    on_tpu,
+    pallas_interpret_default,
+)
 from repro.compat.meshes import (
     ABSTRACT_MESH_PATH,
     NATIVE_MAKE_MESH,
@@ -75,6 +80,9 @@ __all__ = [
     "tree_structure",
     "tree_unflatten",
     "support_matrix",
+    "on_tpu",
+    "default_kernel_mode",
+    "pallas_interpret_default",
 ]
 
 
@@ -92,4 +100,6 @@ def support_matrix() -> dict:
         "mesh_context": "use_mesh" if USE_MESH_PATH else "with_mesh",
         "make_mesh": ("jax.make_mesh" if NATIVE_MAKE_MESH
                       else "mesh_utils.create_device_mesh"),
+        "pallas": "interpret" if pallas_interpret_default() else "compiled",
+        "kernel_mode": default_kernel_mode(),
     }

@@ -189,12 +189,18 @@ class CompressionPlan:
     int_bits: Dict[str, Tuple[int, bool]]
     tune_evals: int = 0
 
-    def bits_of(self, path: Tuple[Any, ...], leaf) -> Optional[int]:
+    def bits_of(self, path: Tuple[Any, ...], leaf):
+        """Packing spec for one leaf: a bare width for floats, a
+        ``(width, signed)`` pair for ints (signedness from range
+        analysis must survive to ``pack_tensor``, or unsigned tensors
+        with the top bit set sign-extend to negatives on unpack), or
+        ``None`` to leave the leaf unpacked."""
         key = path_str(path)
         if key in self.float_bits:
             return self.float_bits[key]
         if key in self.int_bits:
-            return round_bits_to_slice(self.int_bits[key][0])
+            bits, signed = self.int_bits[key]
+            return round_bits_to_slice(bits), signed
         return None
 
     def footprint_ratio(self, tensors: Dict[str, jnp.ndarray]) -> float:

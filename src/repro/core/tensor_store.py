@@ -128,16 +128,22 @@ def is_packed(x) -> bool:
 
 def pack_tree(
     tree: Any,
-    bits_of: Callable[[Tuple[Any, ...], jnp.ndarray], Optional[int]],
+    bits_of: Callable[[Tuple[Any, ...], jnp.ndarray], Any],
 ) -> Any:
-    """Pack every leaf for which ``bits_of(path, leaf)`` returns a width;
-    leaves mapped to None stay unpacked (e.g. norms, small biases)."""
+    """Pack every leaf for which ``bits_of(path, leaf)`` returns a width —
+    either a bare ``bits`` int or a ``(bits, signed)`` pair (int leaves
+    must carry the signedness decided by range analysis through to
+    ``pack_tensor``; a bare width defaults to signed). Leaves mapped to
+    None stay unpacked (e.g. norms, small biases)."""
 
     def _maybe_pack(path, leaf):
-        bits = bits_of(path, leaf)
+        spec = bits_of(path, leaf)
+        if spec is None:
+            return leaf
+        bits, signed = spec if isinstance(spec, tuple) else (spec, True)
         if bits is None or bits >= 32:
             return leaf
-        return pack_tensor(leaf, bits)
+        return pack_tensor(leaf, bits, signed=signed)
 
     return jax.tree_util.tree_map_with_path(_maybe_pack, tree)
 

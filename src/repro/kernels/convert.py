@@ -9,11 +9,13 @@ code lanes before local decode) as opposed to the fused unpack path.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat.pallas import pallas_interpret_default
 from repro.core.formats import FLOAT_FORMATS, decode_float, encode_float
 
 DEFAULT_BLOCK = (256, 512)
@@ -45,8 +47,9 @@ def _elementwise_call(kernel, x, out_dtype, block, interpret):
 
 @functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
 def convert(code: jnp.ndarray, bits: int, block=DEFAULT_BLOCK,
-            interpret: bool = True) -> jnp.ndarray:
+            interpret: Optional[bool] = None) -> jnp.ndarray:
     """Narrow-float code lanes (2-D uint32) -> f32 lanes."""
+    interpret = pallas_interpret_default(interpret)
     assert code.ndim == 2
     return _elementwise_call(
         functools.partial(_convert_kernel, bits=bits),
@@ -56,8 +59,9 @@ def convert(code: jnp.ndarray, bits: int, block=DEFAULT_BLOCK,
 
 @functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
 def truncate(x: jnp.ndarray, bits: int, block=DEFAULT_BLOCK,
-             interpret: bool = True) -> jnp.ndarray:
+             interpret: Optional[bool] = None) -> jnp.ndarray:
     """f32 lanes (2-D) -> narrow-float code lanes (uint32)."""
+    interpret = pallas_interpret_default(interpret)
     assert x.ndim == 2
     return _elementwise_call(
         functools.partial(_truncate_kernel, bits=bits),

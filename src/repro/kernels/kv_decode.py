@@ -15,11 +15,13 @@ the final grid step normalizes and writes the (group, D) output tile.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat.pallas import pallas_interpret_default
 from repro.core import bitpack
 from repro.core.formats import FLOAT_FORMATS, decode_float
 
@@ -65,7 +67,15 @@ def _kv_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(s_idx == s_steps - 1)
     def _flush():
-        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+        # A fully masked sequence (kv_len == 0) leaves m == NEG_INF and
+        # p == exp(0) == 1 for every masked position, so l accumulates
+        # garbage mass and acc / l would emit the mean of stale cache
+        # rows. Guard the normalizer (flash_attention's maximum(l, eps))
+        # and mask the degenerate rows to zeros explicitly.
+        empty = m_ref[...] <= NEG_INF * 0.5               # (G, 1)
+        l_safe = jnp.maximum(l_ref[...], 1e-30)
+        out = jnp.where(empty, 0.0, acc_ref[...] / l_safe)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -80,8 +90,9 @@ def kv_decode(
     bits: int,
     d: int,
     block_s: int = DEFAULT_BLOCK_S,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
+    interpret = pallas_interpret_default(interpret)
     b, h, dim = q.shape
     s, hkv = k_packed.shape[1], k_packed.shape[2]
     group = h // hkv

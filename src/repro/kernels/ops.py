@@ -14,23 +14,35 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels import ref as _ref
 
 
 @dataclasses.dataclass(frozen=True)
 class KernelBackend:
-    """``mode``: "jnp" (XLA everywhere), "pallas_interpret" (CPU
-    validation), or "pallas" (real TPU)."""
+    """``mode``: "auto" (feature-detect at first use), "jnp" (XLA
+    everywhere), "pallas_interpret" (CPU validation), or "pallas" (real
+    TPU). "auto" resolves through ``repro.compat.pallas`` — compiled
+    Pallas when a TPU backend is present, the jnp oracle otherwise —
+    lazily, so importing this module never initializes the JAX backend
+    (multi-host launchers must be able to call
+    ``jax.distributed.initialize`` after importing repro modules)."""
 
-    mode: str = "jnp"
+    mode: str = "auto"
+
+    @property
+    def resolved_mode(self) -> str:
+        if self.mode == "auto":
+            return compat.default_kernel_mode()
+        return self.mode
 
     @property
     def use_pallas(self) -> bool:
-        return self.mode in ("pallas", "pallas_interpret")
+        return self.resolved_mode in ("pallas", "pallas_interpret")
 
     @property
     def interpret(self) -> bool:
-        return self.mode != "pallas"
+        return self.resolved_mode != "pallas"
 
 
 BACKEND = KernelBackend()
@@ -55,11 +67,15 @@ def pack(x, bits: int):
     return _ref.pack_ref(x, bits)
 
 
-def packed_matmul(x, w_packed, bits: int, n: int):
-    if BACKEND.use_pallas and x.ndim == 2:
+def packed_matmul(x, w_packed, bits: int, n: int, transpose: bool = False):
+    """Fused unpack+matmul (the models' packed-weight hot path). The
+    kernel flattens leading batch dims itself; ``transpose`` selects
+    contraction over the packed axis (tied ``unembed``)."""
+    if BACKEND.use_pallas:
         from repro.kernels.packed_matmul import packed_matmul as _k
-        return _k(x, w_packed, bits, n, interpret=BACKEND.interpret)
-    return _ref.packed_matmul_ref(x, w_packed, bits, n)
+        return _k(x, w_packed, bits, n, transpose=transpose,
+                  interpret=BACKEND.interpret)
+    return _ref.packed_matmul_ref(x, w_packed, bits, n, transpose)
 
 
 def kv_decode(q, k_packed, v_packed, kv_len, bits: int, d: int):

@@ -10,11 +10,13 @@ bank-conflict buffering the paper spends Section 6.3 on.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat.pallas import pallas_interpret_default
 from repro.core import bitpack
 from repro.core.formats import FLOAT_FORMATS, encode_float
 
@@ -37,9 +39,10 @@ def pack(
     bits: int,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     block_codes: int = DEFAULT_BLOCK_CODES,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Pack (R, N) floats -> (R, N*bits/32) uint32 words. 2-D input."""
+    interpret = pallas_interpret_default(interpret)
     assert x.ndim == 2, "flatten leading dims before calling"
     rows, n = x.shape
     assert n % bitpack.GROUP == 0, "pad codes to a multiple of 32"

@@ -13,24 +13,84 @@ bits/32, which is exactly the paper's bytes-per-operand saving. Without
 this fusion, XLA materializes the decoded weights and the memory roofline
 term gets worse, not better (see EXPERIMENTS.md section Perf).
 
+This is the kernel ``models.layers.linear`` / ``unembed`` dispatch onto
+for 2-D float-format ``PackedTensor`` weights (via ``kernels.ops``), so
+it accepts everything the model stack throws at it:
+
+  * arbitrary leading/batch dims on ``x`` (flattened onto M);
+  * ``transpose=True`` for contraction over the *packed* axis — the
+    ``unembed`` tied-head spec ``"...d,vd->...v"`` where the table is
+    packed along d. The normal orientation covers every ``linear`` spec
+    (``"...d,df->...f"``, ``"...f,fd->...d"``, ...), all of which are the
+    same last-axis x first-axis contraction;
+  * bf16 or f32 ``x`` (tiles upcast to f32 on the VPU; the MXU dot
+    accumulates f32; output is ``out_dtype``, defaulting to ``x.dtype``);
+  * non-multiple M/N/K: each grid axis picks the largest aligned divisor
+    block <= the target (the trace-time search of
+    ``flash_attention._divisor_chunk``); when no divisor is MXU-viable
+    (best divisor under 1/8 of the target — e.g. a prime dim) the axis is
+    zero-padded up to a block multiple instead. Zero-padded packed words
+    decode to +0.0 and padded x rows/cols are zeros, so padding never
+    changes the contraction; outputs are sliced back to logical shape.
+
 Grid is (M/bm, N/bn, K/bk) with the K dimension innermost ("arbitrary"
 semantics) accumulating into a VMEM f32 scratch; MXU-aligned bm/bn
-multiples of 128 and group-aligned bn (multiple of 32 codes).
+multiples of 128 and group-aligned packed-axis blocks (multiples of 32
+codes, a layout constraint of ``bitpack.pack_groups``).
+
+``interpret=None`` resolves through ``repro.compat.pallas``: compiled on
+a real TPU, interpret (Python validation) everywhere else. The kernel is
+decode/inference-forward only — the training path keeps the materialized
+unpack (see ``models.layers``), which is why ``layers`` wraps this in a
+``custom_vjp`` whose backward uses the unpacked oracle.
 """
 from __future__ import annotations
 
 import functools
+import math
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat.pallas import pallas_interpret_default
 from repro.core import bitpack
 from repro.core.formats import FLOAT_FORMATS, decode_float
 
 DEFAULT_BM = 128
 DEFAULT_BN = 256
 DEFAULT_BK = 512
+
+
+def _plan_axis(dim: int, target: int, align: int) -> Tuple[int, int]:
+    """Choose (block, padded_dim) for one grid axis.
+
+    Prefer the largest divisor of ``dim`` that is <= ``target`` and a
+    multiple of ``align``; if the best such divisor is under 1/8 of the
+    achievable target (no MXU-viable divisor, e.g. a large prime dim),
+    fall back to an aligned ``target``-sized block and zero-pad the axis
+    up to a multiple of it.
+    """
+    cap = max(align, min(target, dim))
+    cap -= cap % align
+    best = 0
+    for cand in range(cap, align - 1, -align):
+        if dim % cand == 0:
+            best = cand
+            break
+    if best and best * 8 >= cap:
+        return best, dim
+    return cap, -(-dim // cap) * cap
+
+
+def _pad_to(x: jnp.ndarray, axis: int, size: int) -> jnp.ndarray:
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
 
 
 def _pmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, bits: int, bn: int,
@@ -51,46 +111,106 @@ def _pmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, bits: int, bn: int,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _pmm_t_kernel(x_ref, w_ref, o_ref, acc_ref, *, bits: int, bk: int,
+                  k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = bitpack.unpack_groups(w_ref[...], bits, bk)
+    w = decode_float(codes, FLOAT_FORMATS[bits])          # (bn, bk) f32
+    x = x_ref[...].astype(jnp.float32)                    # (bm, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),                   # x @ w.T
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _vmem_scratch(bm: int, bn: int):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return [pltpu.VMEM((bm, bn), jnp.float32)]
+    except ImportError:  # pragma: no cover
+        return [pl.MemorySpace.ANY((bm, bn), jnp.float32)]
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "n", "bm", "bn", "bk", "out_dtype",
-                     "interpret"),
+    static_argnames=("bits", "n", "transpose", "bm", "bn", "bk",
+                     "out_dtype", "interpret"),
 )
 def packed_matmul(
-    x: jnp.ndarray,            # (M, K) f32/bf16
-    w_packed: jnp.ndarray,     # (K, n*bits/32) uint32
+    x: jnp.ndarray,            # (..., K) f32/bf16
+    w_packed: jnp.ndarray,     # (K, ceil(N/32)*bits) uint32, or
+                               # (N, ceil(K/32)*bits) when transpose
     bits: int,
-    n: int,
+    n: int,                    # logical output features N
+    transpose: bool = False,
     bm: int = DEFAULT_BM,
     bn: int = DEFAULT_BN,
     bk: int = DEFAULT_BK,
-    out_dtype=jnp.float32,
-    interpret: bool = True,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    m, kdim = x.shape
-    bm = min(bm, m)
-    bn = min(bn, n)
-    bk = min(bk, kdim)
-    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
-    assert bn % bitpack.GROUP == 0
-    words_bn = bn // 32 * bits
-    k_steps = kdim // bk
+    """x @ W (or x @ W.T when ``transpose``) without materializing W.
 
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-        scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
-    except ImportError:  # pragma: no cover
-        scratch = [pl.MemorySpace.ANY((bm, bn), jnp.float32)]
+    ``bm``/``bn``/``bk`` are block-size *targets*; the actual blocks come
+    from ``_plan_axis`` (divisor selection + padding fallback). ``n`` is
+    the logical output width — packed columns beyond it (group padding)
+    decode to zero and are sliced off.
+    """
+    interpret = pallas_interpret_default(interpret)
+    out_dtype = out_dtype or x.dtype
+    assert w_packed.ndim == 2, "packed weights are 2-D (pack axis last)"
+    assert bits in FLOAT_FORMATS, f"no float format with {bits} bits"
 
-    return pl.pallas_call(
-        functools.partial(_pmm_kernel, bits=bits, bn=bn, k_steps=k_steps),
-        grid=(m // bm, n // bn, k_steps),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, words_bn), lambda i, j, k: (k, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=scratch,
+    lead = x.shape[:-1]
+    kdim = x.shape[-1]
+    m = math.prod(lead) if lead else 1
+    x2 = x.reshape(m, kdim)
+
+    if transpose:
+        # W logical (N, K) packed along K; contraction over the packed
+        # axis, so K blocks must cut on 32-code group boundaries.
+        assert w_packed.shape[0] == n, (w_packed.shape, n)
+        k_ceil = w_packed.shape[1] // bits * bitpack.GROUP
+        assert kdim <= k_ceil
+        bn_, n_pad = _plan_axis(n, bn, 1)
+        bk_, k_pad = _plan_axis(k_ceil, bk, bitpack.GROUP)
+        wp = _pad_to(_pad_to(w_packed, 1, k_pad // 32 * bits), 0, n_pad)
+        kernel = functools.partial(_pmm_t_kernel, bits=bits, bk=bk_)
+        w_spec = pl.BlockSpec((bn_, bk_ // 32 * bits),
+                              lambda i, j, k: (j, k))
+    else:
+        # W logical (K, N) packed along N; output blocks must cut on
+        # group boundaries.
+        assert w_packed.shape[0] == kdim, (w_packed.shape, kdim)
+        n_ceil = w_packed.shape[1] // bits * bitpack.GROUP
+        assert n <= n_ceil
+        bn_, n_pad = _plan_axis(n_ceil, bn, bitpack.GROUP)
+        bk_, k_pad = _plan_axis(kdim, bk, 1)
+        wp = _pad_to(_pad_to(w_packed, 1, n_pad // 32 * bits), 0, k_pad)
+        kernel = functools.partial(_pmm_kernel, bits=bits, bn=bn_)
+        w_spec = pl.BlockSpec((bk_, bn_ // 32 * bits),
+                              lambda i, j, k: (k, j))
+
+    bm_, m_pad = _plan_axis(m, bm, 1)
+    x2 = _pad_to(_pad_to(x2, 1, k_pad), 0, m_pad)
+    k_steps = k_pad // bk_
+    out = pl.pallas_call(
+        functools.partial(kernel, k_steps=k_steps),
+        grid=(m_pad // bm_, n_pad // bn_, k_steps),
+        in_specs=[pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)), w_spec],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), out_dtype),
+        scratch_shapes=_vmem_scratch(bm_, bn_),
         interpret=interpret,
-    )(x, w_packed)
+    )(x2, wp)
+
+    return out[:m, :n].reshape(lead + (n,))

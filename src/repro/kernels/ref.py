@@ -36,11 +36,17 @@ def truncate_ref(x: jnp.ndarray, bits: int) -> jnp.ndarray:
 
 
 def packed_matmul_ref(x: jnp.ndarray, w_packed: jnp.ndarray, bits: int,
-                      n: int) -> jnp.ndarray:
-    """x @ unpack(w): x (M, K) f32/bf16, w_packed (K, n*bits/32) uint32."""
-    w = unpack_ref(w_packed, bits, n, jnp.float32)
-    return jnp.dot(x.astype(jnp.float32), w,
-                   preferred_element_type=jnp.float32)
+                      n: int, transpose: bool = False) -> jnp.ndarray:
+    """x @ unpack(w): x (..., K) f32/bf16; w_packed (K, n*bits/32) uint32,
+    or (n, K*bits/32) when ``transpose`` (contraction over the packed
+    axis — the ``unembed`` tied-head orientation)."""
+    if transpose:
+        w = unpack_ref(w_packed, bits, x.shape[-1], jnp.float32)  # (N, K)
+        return jnp.einsum("...k,nk->...n", x.astype(jnp.float32), w,
+                          preferred_element_type=jnp.float32)
+    w = unpack_ref(w_packed, bits, n, jnp.float32)                # (K, N)
+    return jnp.einsum("...k,kn->...n", x.astype(jnp.float32), w,
+                      preferred_element_type=jnp.float32)
 
 
 def kv_decode_ref(
@@ -63,7 +69,12 @@ def kv_decode_ref(
     if kv_len is not None:
         mask = jnp.arange(s)[None, None, None, :] < kv_len[:, None, None, None]
         logits = jnp.where(mask, logits, -jnp.inf)
-    p = jnp.exp(logits - logits.max(-1, keepdims=True))
-    p = p / p.sum(-1, keepdims=True)
+    # Fully masked rows (kv_len == 0) have max == -inf; anchor them at 0
+    # and guard the normalizer so they emit zeros instead of NaN — the
+    # same degenerate case the Pallas kernel masks at flush time.
+    mx = logits.max(-1, keepdims=True)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    p = jnp.exp(logits - mx)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v)
     return out.reshape(b, h, dim).astype(q.dtype)

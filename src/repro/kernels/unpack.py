@@ -14,11 +14,13 @@ keep the VPU busy. Rows tile at 8/16/32 sublanes.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat.pallas import pallas_interpret_default
 from repro.core import bitpack
 from repro.core.formats import FLOAT_FORMATS, decode_float
 
@@ -44,13 +46,14 @@ def unpack(
     out_dtype=jnp.float32,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     block_codes: int = DEFAULT_BLOCK_CODES,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Unpack (R, n*bits/32) uint32 -> (R, n) floats. 2-D input.
 
-    ``interpret=True`` runs the kernel body in Python (CPU validation);
-    on TPU pass interpret=False.
+    ``interpret=None`` resolves via ``repro.compat.pallas``: compiled on
+    real TPU, Python-interpreted (CPU validation) elsewhere.
     """
+    interpret = pallas_interpret_default(interpret)
     assert packed.ndim == 2, "flatten leading dims before calling"
     rows = packed.shape[0]
     assert n % bitpack.GROUP == 0, "pad codes to a multiple of 32"

@@ -3,31 +3,122 @@
 Weights may arrive either as plain arrays or as ``PackedTensor`` leaves
 (the register-file analogue); ``linear`` dispatches transparently, so
 every model in the zoo supports packed execution without per-family code.
+
+Packed-weight dispatch rules (the register-file fusion, end-to-end):
+
+  * ``linear`` / ``unembed`` with a 2-D float-format ``PackedTensor``
+    weight route through the fused ``kernels.ops.packed_matmul`` — the
+    packed words stream to the kernel and expand in VMEM on the way to
+    the MXU, so the decoded weight never materializes in HBM. Every spec
+    ``linear`` is called with is the same last-axis x first-axis
+    contraction the kernel computes; the tied ``unembed`` head
+    (``"...d,vd->...v"``, table packed along d) takes the kernel's
+    ``transpose`` orientation.
+  * The fused kernel is decode/inference-forward only: its ``custom_vjp``
+    backward falls back to the materialized unpack+einsum (training keeps
+    the old path). ``fallback=True`` forces that legacy path in the
+    forward too (escape hatch + parity reference).
+  * Everything else — int-kind packed tensors, stacked >= 3-D packed
+    leaves (MoE expert banks), gathers (``embed``), norms/biases — uses
+    ``unpack_maybe`` (the materialized Value Extractor path).
+
 Sharding is annotated with ``with_sharding_constraint`` using mesh axis
 names; outside a mesh context the constraints are no-ops.
 """
 from __future__ import annotations
 
+import functools
+import re
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.formats import FLOAT_FORMATS
 from repro.core.tensor_store import PackedTensor, is_packed
 from repro.distributed.sharding import constrain
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 
 def unpack_maybe(w, dtype=None):
-    """PackedTensor -> array (Value Extractor path); arrays pass through."""
+    """PackedTensor -> array (Value Extractor path); arrays pass through.
+
+    This is the *materialized* decode — the fallback/grad path. Matmul
+    forwards against 2-D float packed weights should go through
+    ``linear``/``unembed`` so they hit the fused kernel instead.
+    """
     if is_packed(w):
         x = w.unpack()
         return x.astype(dtype) if dtype is not None else x
     return w if dtype is None else w.astype(dtype)
 
 
-def linear(x: jnp.ndarray, w, spec: str = "...d,df->...f") -> jnp.ndarray:
-    """einsum against a (possibly packed) weight."""
+def _fusable(w) -> bool:
+    """True when a weight can take the fused packed-matmul path."""
+    return (is_packed(w) and w.kind == "float"
+            and len(w.logical_shape) == 2 and w.bits in FLOAT_FORMATS)
+
+
+@functools.lru_cache(maxsize=None)
+def _plain_matmul_spec(spec: str) -> bool:
+    """True for specs of the form ``"...a,ab->...b"`` — the last-axis x
+    first-axis contraction the fused kernel computes. Anything else must
+    take the unpack path rather than silently computing the wrong product.
+    """
+    m = re.fullmatch(r"\.\.\.(\w),(\w)(\w)->\.\.\.(\w)", spec)
+    # the contraction letter must differ from the output letter:
+    # "...d,dd->...d" is einsum diagonal scaling, not a matmul
+    return (bool(m) and m.group(1) == m.group(2)
+            and m.group(3) == m.group(4) and m.group(1) != m.group(3))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _fused_mm(x, data, bits, n, transpose):
+    return kops.packed_matmul(x, data, bits, n, transpose=transpose)
+
+
+def _fused_mm_fwd(x, data, bits, n, transpose):
+    return _fused_mm(x, data, bits, n, transpose), (x, data)
+
+
+def _fused_mm_bwd(bits, n, transpose, res, g):
+    # The fused kernel is decode/inference-forward; the backward pass
+    # keeps the materialized unpack+einsum (the training path).
+    x, data = res
+    gf = g.astype(jnp.float32)
+    if transpose:
+        w = kref.unpack_ref(data, bits, x.shape[-1], jnp.float32)  # (N, K)
+        gx = jnp.einsum("...n,nk->...k", gf, w)
+    else:
+        w = kref.unpack_ref(data, bits, n, jnp.float32)            # (K, N)
+        gx = jnp.einsum("...n,kn->...k", gf, w)
+    return gx.astype(x.dtype), np.zeros(data.shape, jax.dtypes.float0)
+
+
+_fused_mm.defvjp(_fused_mm_fwd, _fused_mm_bwd)
+
+
+def _packed_matmul(x: jnp.ndarray, w: PackedTensor,
+                   transpose: bool) -> jnp.ndarray:
+    n = w.logical_shape[0] if transpose else w.logical_shape[1]
+    contract = w.logical_shape[1] if transpose else w.logical_shape[0]
+    assert x.shape[-1] == contract, (x.shape, w.logical_shape, transpose)
+    return _fused_mm(x, w.data, w.bits, n, transpose).astype(x.dtype)
+
+
+def linear(x: jnp.ndarray, w, spec: str = "...d,df->...f",
+           fallback: bool = False) -> jnp.ndarray:
+    """einsum against a (possibly packed) weight.
+
+    2-D float ``PackedTensor`` weights dispatch to the fused
+    ``packed_matmul`` kernel when ``spec`` is the plain last-axis x
+    first-axis contraction it computes (every spec the model stack uses);
+    other specs and ``fallback=True`` take the unpack-then-einsum path.
+    """
+    if _fusable(w) and _plain_matmul_spec(spec) and not fallback:
+        return _packed_matmul(x, w, transpose=False)
     w = unpack_maybe(w, x.dtype)
     return jnp.einsum(spec, x, w)
 
@@ -65,16 +156,17 @@ def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
     return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
 
 
-def mlp(x, w_in, w_gate, w_out, gated: bool):
-    """SwiGLU (gated) or GELU MLP; d_ff sharded over 'model'."""
-    h = linear(x, w_in)
+def mlp(x, w_in, w_gate, w_out, gated: bool, fallback: bool = False):
+    """SwiGLU (gated) or GELU MLP; d_ff sharded over 'model'. Packed
+    weights flow through ``linear``'s fused dispatch."""
+    h = linear(x, w_in, fallback=fallback)
     if gated:
-        g = linear(x, w_gate)
+        g = linear(x, w_gate, fallback=fallback)
         h = jax.nn.silu(g) * h
     else:
         h = jax.nn.gelu(h)
     h = constrain(h, ("data", None, "model"))
-    return linear(h, w_out, "...f,fd->...d")
+    return linear(h, w_out, "...f,fd->...d", fallback=fallback)
 
 
 def embed(tokens: jnp.ndarray, table) -> jnp.ndarray:
@@ -85,7 +177,14 @@ def embed(tokens: jnp.ndarray, table) -> jnp.ndarray:
     return jnp.take(t, tokens, axis=0)
 
 
-def unembed(x: jnp.ndarray, table_or_head, tied: bool) -> jnp.ndarray:
+def unembed(x: jnp.ndarray, table_or_head, tied: bool,
+            fallback: bool = False) -> jnp.ndarray:
+    """Vocabulary projection. A packed tied table (V, D) is packed along
+    d — the fused kernel's ``transpose`` orientation contracts over the
+    packed axis directly; an untied head (D, V) takes the normal
+    orientation. ``fallback=True`` forces unpack-then-einsum."""
+    if _fusable(table_or_head) and not fallback:
+        return _packed_matmul(x, table_or_head, transpose=tied)
     w = unpack_maybe(table_or_head, x.dtype)
     if tied:
         return jnp.einsum("...d,vd->...v", x, w)

@@ -52,6 +52,8 @@ class ServeEngine:
     max_slots: Optional[int] = None
     chip: TPUChipConfig = TPU_V5E
     greedy: bool = True
+    bos_token: int = 0             # fed when a request has no prompt
+    max_results: int = 65536       # finished-output retention (FIFO)
 
     def __post_init__(self):
         self.lm = LM(self.cfg)
@@ -73,7 +75,13 @@ class ServeEngine:
             self.state["clen"] = jnp.full((self.n_slots,),
                                           self.cfg.encoder_seq, jnp.int32)
         self._free = list(range(self.n_slots))
+        # _active holds only in-flight requests (bounded by n_slots);
+        # finished outputs move to _results so per-tick scans stay O(slots)
+        # under sustained traffic instead of O(total requests ever served).
+        # _results itself is FIFO-capped at max_results so memory is
+        # bounded too — clients must collect outputs within that window.
         self._active: Dict[int, Request] = {}
+        self._results: Dict[int, List[int]] = {}
         self._queue: List[Request] = []
         self._next_rid = 0
         self._step = jit(self.lm.decode_step, donate_argnums=(1,))
@@ -94,8 +102,7 @@ class ServeEngine:
         return rid
 
     def result(self, rid: int) -> Optional[List[int]]:
-        req = self._active.get(rid)
-        return req.output if req and req.done else None
+        return self._results.get(rid)
 
     @property
     def occupancy(self) -> float:
@@ -108,9 +115,13 @@ class ServeEngine:
             slot = self._free.pop(0)
             req.slot = slot
             self._active[req.rid] = req
-            # reset this slot's KV length; feed prompt token-by-token
+            # reset this slot's KV length; feed prompt token-by-token.
+            # An empty prompt still needs one deterministic first token —
+            # without it the first tick would replay whatever value the
+            # slot's previous occupant left behind in _last_tokens.
             self.state["len"] = self.state["len"].at[slot].set(0)
-            self._pending_prefill[req.rid] = list(req.prompt)
+            self._pending_prefill[req.rid] = (
+                list(req.prompt) or [self.bos_token])
 
     def step(self) -> int:
         """One decode tick for every resident sequence. Returns number of
@@ -119,8 +130,6 @@ class ServeEngine:
             return 0
         tokens = np.array(self._last_tokens)     # writable host copy
         for req in self._active.values():
-            if req.done:
-                continue
             pend = self._pending_prefill.get(req.rid)
             if pend:
                 tokens[req.slot, 0] = pend.pop(0)
@@ -135,8 +144,6 @@ class ServeEngine:
         emitted = 0
         finished: List[int] = []
         for req in list(self._active.values()):
-            if req.done:
-                continue
             pend = self._pending_prefill.get(req.rid)
             if pend:                       # still prefilling: ignore sample
                 continue
@@ -147,10 +154,13 @@ class ServeEngine:
                 req.done = True
                 req.finished_at = time.perf_counter()
                 finished.append(req.rid)
-        for rid in finished:
-            slot = self._active[rid].slot
-            self._free.append(slot)        # slot recycled: occupancy win
+        for rid in finished:               # evict: _active stays bounded
+            req = self._active.pop(rid)
+            self._results[rid] = req.output
+            self._free.append(req.slot)    # slot recycled: occupancy win
             self._pending_prefill.pop(rid, None)
+        while len(self._results) > self.max_results:
+            self._results.pop(next(iter(self._results)))
         self._last_tokens = jnp.asarray(
             np.asarray(nxt)[:, None].astype(np.int32))
         self._admit()
@@ -160,8 +170,7 @@ class ServeEngine:
 
     def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
         t0 = time.perf_counter()
-        while (self._queue or any(not r.done for r in self._active.values())
-               ) and self.ticks < max_ticks:
+        while (self._queue or self._active) and self.ticks < max_ticks:
             self.step()
         dt = time.perf_counter() - t0
         return {

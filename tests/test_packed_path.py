@@ -1,0 +1,285 @@
+"""Fused packed-matmul path: kernel parity over awkward shapes / dtypes /
+all Table 3 widths, layer dispatch + grads, and signedness round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.compress import CompressionPlan
+from repro.core.formats import FLOAT_FORMATS
+from repro.core.tensor_store import pack_tensor, pack_tree
+from repro.kernels import ops as kops
+from repro.kernels import ref as R
+from repro.kernels.kv_decode import kv_decode
+from repro.kernels.packed_matmul import packed_matmul
+from repro.models import layers as L
+
+ALL_WIDTHS = sorted(FLOAT_FORMATS)          # 8..32, incl. the AF32 identity
+
+
+@pytest.fixture
+def pallas_interpret_backend():
+    kops.set_backend("pallas_interpret")
+    yield
+    kops.set_backend("jnp")
+
+
+# -- kernel parity: fused vs unpack+einsum ------------------------------------
+
+@pytest.mark.parametrize("bits", ALL_WIDTHS)
+def test_fused_parity_all_widths(bits):
+    m, k, n = 4, 64, 96
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray((rng.standard_normal((m, k)) * 0.5).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((k, n)) * 0.5).astype(np.float32))
+    wp = R.pack_ref(w, bits)
+    ref = R.packed_matmul_ref(x, wp, bits, n)
+    got = packed_matmul(x, wp, bits, n, bm=8, bn=32, bk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mkn", [(3, 50, 33), (5, 96, 40), (7, 33, 96),
+                                 (1, 37, 65)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_nonmultiple_shapes(mkn, dtype):
+    """Divisor-block selection + zero padding over shapes that divide by
+    nothing MXU-shaped; bf16 inputs upcast in-kernel."""
+    bits = 16
+    m, k, n = mkn
+    rng = np.random.default_rng(m + k + n)
+    x = jnp.asarray((rng.standard_normal((m, k)) * 0.5)).astype(dtype)
+    w = jnp.asarray((rng.standard_normal((k, n)) * 0.5).astype(np.float32))
+    wp = R.pack_ref(w, bits)
+    ref = R.packed_matmul_ref(x, wp, bits, n)
+    got = packed_matmul(x, wp, bits, n, bm=8, bn=32, bk=32, interpret=True)
+    assert got.shape == (m, n)
+    assert got.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref), rtol=tol, atol=tol)
+
+
+def test_fused_leading_batch_dims():
+    bits, k, n = 16, 40, 64
+    rng = np.random.default_rng(0)
+    x = jnp.asarray((rng.standard_normal((2, 3, k)) * 0.5
+                     ).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((k, n)) * 0.5).astype(np.float32))
+    wp = R.pack_ref(w, bits)
+    got = packed_matmul(x, wp, bits, n, bm=8, bn=32, bk=32, interpret=True)
+    assert got.shape == (2, 3, n)
+    ref = R.packed_matmul_ref(x, wp, bits, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [8, 16, 28])
+def test_fused_transpose_unembed_spec(bits):
+    """x @ W.T with W (V, D) packed along D — the tied-unembed spec."""
+    v, d = 48, 40
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray((rng.standard_normal((2, 5, d)) * 0.5
+                     ).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((v, d)) * 0.5).astype(np.float32))
+    wp = R.pack_ref(w, bits)
+    got = packed_matmul(x, wp, bits, v, transpose=True,
+                        bm=8, bn=16, bk=32, interpret=True)
+    assert got.shape == (2, 5, v)
+    ref = R.packed_matmul_ref(x, wp, bits, v, transpose=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- layer dispatch -----------------------------------------------------------
+
+def test_linear_dispatches_to_fused_kernel(monkeypatch):
+    calls = []
+    orig = kops.packed_matmul
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs.get("transpose", False))
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(kops, "packed_matmul", spy)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 3, 64)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((64, 96)) * 0.2
+                     ).astype(np.float32))
+    wt = pack_tensor(w, 16)
+    got = L.linear(x, wt)
+    assert calls == [False]
+    ref = L.linear(x, wt, fallback=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+    head = pack_tensor(jnp.asarray(
+        (rng.standard_normal((128, 64)) * 0.2).astype(np.float32)), 16)
+    got_t = L.unembed(x, head, tied=True)
+    assert calls == [False, True]
+    ref_t = L.unembed(x, head, tied=True, fallback=True)
+    np.testing.assert_allclose(np.asarray(got_t), np.asarray(ref_t),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_linear_fused_under_pallas_interpret(pallas_interpret_backend):
+    """The dispatch survives the real kernel backend, not just the oracle."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((64, 32)) * 0.2
+                     ).astype(np.float32))
+    wt = pack_tensor(w, 16)
+    got = L.linear(x, wt)
+    ref = L.linear(x, wt, fallback=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_linear_grad_matches_fallback_path():
+    """The fused forward carries a custom VJP whose backward is the
+    materialized unpack path — grads wrt x must match it."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 48)).astype(np.float32))
+    wt = pack_tensor(jnp.asarray(
+        (rng.standard_normal((48, 32)) * 0.2).astype(np.float32)), 16)
+
+    g_fused = jax.grad(lambda x_: L.linear(x_, wt).sum())(x)
+    g_ref = jax.grad(
+        lambda x_: L.linear(x_, wt, fallback=True).astype(jnp.float32).sum()
+    )(x)
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-5)
+
+    ht = pack_tensor(jnp.asarray(
+        (rng.standard_normal((64, 48)) * 0.2).astype(np.float32)), 16)
+    g_fused_t = jax.grad(lambda x_: L.unembed(x_, ht, tied=True).sum())(x)
+    g_ref_t = jax.grad(
+        lambda x_: L.unembed(x_, ht, tied=True,
+                             fallback=True).astype(jnp.float32).sum())(x)
+    np.testing.assert_allclose(np.asarray(g_fused_t), np.asarray(g_ref_t),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_int_and_stacked_packed_fall_back(monkeypatch):
+    """Int-kind packed weights and non-plain einsum specs must take the
+    unpack path, never the fused kernel."""
+    def boom(*a, **k):
+        raise AssertionError("fused kernel must not be called")
+
+    monkeypatch.setattr(kops, "packed_matmul", boom)
+    x = jnp.ones((2, 32), jnp.float32)
+    w_int = pack_tensor(jnp.arange(32 * 32, dtype=jnp.int32
+                                   ).reshape(32, 32) % 100, 8,
+                        signed=False, out_dtype=jnp.float32)
+    out = L.linear(x, w_int)
+    assert out.shape == (2, 32)
+
+    # a float packed weight but a spec contracting the weight's *second*
+    # axis: the fused kernel would compute the wrong product, so the
+    # dispatch guard must route it to unpack+einsum
+    rng = np.random.default_rng(5)
+    wf = jnp.asarray((rng.standard_normal((48, 32)) * 0.2
+                      ).astype(np.float32))
+    wt = pack_tensor(wf, 16)
+    got = L.linear(x, wt, spec="...a,ba->...b")
+    ref = jnp.einsum("...a,ba->...b", x, wf.astype(jnp.float16
+                                                   ).astype(jnp.float32))
+    assert got.shape == (2, 48)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=5e-3, atol=5e-3)
+
+    # all-same-letter spec is einsum diagonal scaling, not a matmul —
+    # it must also bypass the fused kernel
+    wd = pack_tensor(jnp.asarray((rng.standard_normal((32, 32)) * 0.2
+                                  ).astype(np.float32)), 16)
+    got_d = L.linear(x, wd, spec="...d,dd->...d")
+    assert got_d.shape == (2, 32)
+
+
+# -- signedness: pack_tree / CompressionPlan round-trips ----------------------
+
+@pytest.mark.parametrize("bits", [4, 8, 12, 16])
+def test_int_roundtrip_unsigned_top_bit(bits):
+    """Unsigned tensors with the top bit set must not come back negative."""
+    hi = (1 << bits) - 1
+    vals = jnp.asarray(
+        np.array([0, 1, hi // 2, hi - 1, hi] * 8, np.int32).reshape(8, 5))
+    pt = pack_tensor(vals, bits, signed=False)
+    back = np.asarray(pt.unpack())
+    assert back.min() >= 0
+    np.testing.assert_array_equal(back, np.asarray(vals))
+
+
+@pytest.mark.parametrize("bits", [4, 8, 12, 16])
+def test_int_roundtrip_signed(bits):
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    vals = jnp.asarray(
+        np.array([lo, lo + 1, -1, 0, 1, hi] * 4, np.int32).reshape(8, 3))
+    pt = pack_tensor(vals, bits, signed=True)
+    np.testing.assert_array_equal(np.asarray(pt.unpack()),
+                                  np.asarray(vals))
+
+
+@settings(max_examples=50)
+@given(st.integers(1, 4), st.integers(0, 2 ** 16 - 1))
+def test_int_roundtrip_property(nibbles, value):
+    """Any value in [0, 2^bits) survives an unsigned round-trip; its
+    two's-complement reinterpretation survives a signed one."""
+    bits = 4 * nibbles
+    value %= 1 << bits
+    arr = jnp.full((4, 32), value, jnp.int32)
+    back_u = int(np.asarray(pack_tensor(arr, bits, signed=False)
+                            .unpack())[0, 0])
+    assert back_u == value
+    signed_val = value - (1 << bits) if value >= 1 << (bits - 1) else value
+    arr_s = jnp.full((4, 32), signed_val, jnp.int32)
+    back_s = int(np.asarray(pack_tensor(arr_s, bits, signed=True)
+                            .unpack())[0, 0])
+    assert back_s == signed_val
+
+
+def test_pack_tree_threads_signedness_regression():
+    """CompressionPlan.bits_of used to drop the signed flag, so pack_tree
+    packed unsigned ranges as signed and [0, 255] came back negative."""
+    plan = CompressionPlan(float_bits={},
+                           int_bits={"x": (8, False), "y": (6, True)})
+    tree = {
+        "x": jnp.arange(256, dtype=jnp.int32).reshape(8, 32),   # top bit set
+        "y": jnp.asarray(np.array([-17, 0, 15] * 32, np.int32
+                                  ).reshape(3, 32)),
+    }
+    packed = pack_tree(tree, plan.bits_of)
+    assert packed["x"].signed is False
+    assert packed["x"].bits == 8
+    assert packed["y"].signed is True
+    assert packed["y"].bits == 8                 # 6 rounds up to a slice
+    np.testing.assert_array_equal(np.asarray(packed["x"].unpack()),
+                                  np.asarray(tree["x"]))
+    np.testing.assert_array_equal(np.asarray(packed["y"].unpack()),
+                                  np.asarray(tree["y"]))
+
+
+# -- kv_decode degenerate mask ------------------------------------------------
+
+def test_kv_decode_fully_masked_is_zero():
+    """kv_len == 0 must give zeros, not the mean of stale cache rows."""
+    b, h, hkv, d, s = 2, 4, 2, 32, 64
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((b, h, d)).astype(np.float32))
+    # non-zero "stale garbage" in the cache
+    k = jnp.asarray((rng.standard_normal((b, s, hkv, d)) + 3.0
+                     ).astype(np.float32))
+    v = jnp.asarray((rng.standard_normal((b, s, hkv, d)) + 3.0
+                     ).astype(np.float32))
+    kp, vp = R.pack_ref(k, 16), R.pack_ref(v, 16)
+    lens = jnp.asarray(np.array([0, s], np.int32))
+    got = np.asarray(kv_decode(q, kp, vp, lens, 16, d, block_s=32,
+                               interpret=True))
+    ref = np.asarray(R.kv_decode_ref(q, kp, vp, 16, d, lens))
+    assert np.isfinite(got).all() and np.isfinite(ref).all()
+    np.testing.assert_array_equal(got[0], np.zeros_like(got[0]))
+    np.testing.assert_array_equal(ref[0], np.zeros_like(ref[0]))
+    # the non-degenerate batch entry still matches the oracle
+    np.testing.assert_allclose(got[1], ref[1], rtol=2e-5, atol=2e-5)
