@@ -30,6 +30,7 @@ def main() -> None:
     from benchmarks.perf_cells import bench_perf
     from benchmarks.roofline import bench_roofline
     from benchmarks.serving_residency import bench_residency
+    from benchmarks.speculative import bench_speculative
 
     benches = {
         "table1": bench_table1,
@@ -43,6 +44,7 @@ def main() -> None:
         "residency": bench_residency,
         "perf": bench_perf,
         "roofline": bench_roofline,
+        "speculative": bench_speculative,
     }
     selected = (set(args.only.split(",")) if args.only else set(benches))
 

@@ -27,16 +27,20 @@ if ! $smoke_only; then
     python -m pytest -x -q \
         --deselect tests/test_distributed.py::test_dryrun_mesh_matrix
 
-    echo "== benchmark smoke (micro + perf + packed path) =="
+    echo "== benchmark smoke (micro + perf + packed path + speculative) =="
     # packed_path runs the fused kernel in Pallas interpret mode for the
-    # parity row and (re)writes BENCH_packed_path.json as a CI artifact
-    # (removed first so a stale copy can't mask a bench that stopped
-    # writing it). The CSV is always echoed — even when run.py exits
-    # nonzero — so the rows that did succeed reach the CI log; ERROR:
-    # rows or a nonzero exit fail the build.
-    rm -f BENCH_packed_path.json
+    # parity row and (re)writes BENCH_packed_path.json as a CI artifact;
+    # speculative drains the same traffic through the plain and the
+    # narrow-draft engines, asserts greedy outputs identical, and writes
+    # BENCH_speculative.json (acceptance rate + bytes/committed token).
+    # Artifacts are removed first so a stale copy can't mask a bench that
+    # stopped writing them. The CSV is always echoed — even when run.py
+    # exits nonzero — so the rows that did succeed reach the CI log;
+    # ERROR: rows or a nonzero exit fail the build.
+    rm -f BENCH_packed_path.json BENCH_speculative.json
     set +e
-    bench_csv=$(python -m benchmarks.run --only micro,perf,packed_path)
+    bench_csv=$(python -m benchmarks.run \
+        --only micro,perf,packed_path,speculative)
     bench_rc=$?
     set -e
     printf '%s\n' "$bench_csv"
@@ -47,6 +51,8 @@ if ! $smoke_only; then
     fi
     test -f BENCH_packed_path.json || {
         echo "BENCH_packed_path.json artifact missing" >&2; exit 1; }
+    test -f BENCH_speculative.json || {
+        echo "BENCH_speculative.json artifact missing" >&2; exit 1; }
 fi
 
 echo "== 8-device distributed smoke (mesh matrix) =="

@@ -1,6 +1,9 @@
 """qwen3-8b [hf:Qwen/Qwen3-8B]: 36L d_model=4096 32H (GQA kv=8)
 d_ff=12288 vocab=151936 — qk_norm on per-head q/k, SwiGLU, GQA.
-Pure full attention => long_500k skipped."""
+Pure full attention => long_500k skipped. Speculative serving drafts at
+AF12 (one ladder step below the AF16 weight plan)."""
+import dataclasses
+
 from repro.models.config import HIGH_QUALITY_COMPRESSION, ModelConfig
 
 CONFIG = ModelConfig(
@@ -16,5 +19,6 @@ CONFIG = ModelConfig(
     gated_mlp=True,
     qk_norm=True,
     rope_theta=1000000.0,
-    compression=HIGH_QUALITY_COMPRESSION,
+    compression=dataclasses.replace(
+        HIGH_QUALITY_COMPRESSION, draft_weight_bits=12),
 )

@@ -1,6 +1,9 @@
 """stablelm-12b [hf:stabilityai]: 40L d_model=5120 32H (GQA kv=8)
 d_ff=13824 vocab=100352 — RoPE + SwiGLU. head_dim = 5120/32 = 160.
-Pure full attention => long_500k skipped."""
+Pure full attention => long_500k skipped. Speculative serving drafts at
+AF8 (two ladder steps down: this arch tolerates the narrowest draft)."""
+import dataclasses
+
 from repro.models.config import HIGH_QUALITY_COMPRESSION, ModelConfig
 
 CONFIG = ModelConfig(
@@ -15,5 +18,6 @@ CONFIG = ModelConfig(
     head_dim=160,
     gated_mlp=True,
     rope_theta=10000.0,
-    compression=HIGH_QUALITY_COMPRESSION,
+    compression=dataclasses.replace(
+        HIGH_QUALITY_COMPRESSION, draft_weight_bits=8),
 )

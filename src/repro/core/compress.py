@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.allocator import Allocation, Operand, SliceAllocator
-from repro.core.formats import round_bits_to_slice
+from repro.core.formats import ladder_snap, round_bits_to_slice
 from repro.core.precision_tuning import (
     QuantizedKernel,
     TuneResult,
@@ -253,3 +253,79 @@ def plan_tensors(
         int_bits=int_bits,
         tune_evals=tuned.evaluations,
     )
+
+
+# ---------------------------------------------------------------------------
+# Plan derivation + repacking (the speculative-serving draft ladder)
+# ---------------------------------------------------------------------------
+
+def uniform_plan(tree: Any, bits: int, min_ndim: int = 2) -> CompressionPlan:
+    """A trivial plan assigning one Table 3 width to every float leaf with
+    ``ndim >= min_ndim`` (matmul weights / embedding tables; unstacked
+    norms and biases stay at the compute dtype — layer-stacked (L, d)
+    norm scales ride along deliberately, they decode on the cheap
+    materialized path). Used where a tuned plan is not available but the
+    config pins a deployment width (``weight_bits``)."""
+    from repro.core.tensor_store import is_packed
+
+    float_bits: Dict[str, int] = {}
+    if bits is None or bits >= 32:
+        return CompressionPlan(float_bits={}, int_bits={})
+
+    def visit(path, leaf):
+        if is_packed(leaf):
+            if leaf.kind == "float":
+                float_bits[path_str(path)] = bits
+            return
+        if (np.issubdtype(leaf.dtype, np.floating)
+                and getattr(leaf, "ndim", 0) >= min_ndim):
+            float_bits[path_str(path)] = bits
+
+    jax.tree_util.tree_map_with_path(
+        visit, tree, is_leaf=is_packed)
+    return CompressionPlan(float_bits=float_bits, int_bits={})
+
+
+def derive_plan(plan: CompressionPlan, delta_bits: int = 4) -> CompressionPlan:
+    """Derive the *draft* plan: every float leaf steps ``delta_bits`` down
+    the Table 3 ladder (snapped to the widest rung <= width - delta_bits,
+    floored at the narrowest rung) without re-running precision tuning.
+    Integer widths come from range analysis and are exact — narrowing them
+    would corrupt values, so they are carried over unchanged."""
+    if delta_bits < 0:
+        raise ValueError(f"delta_bits must be >= 0, got {delta_bits}")
+    new_floats: Dict[str, int] = {
+        key: ladder_snap(bits - delta_bits)
+        for key, bits in plan.float_bits.items()
+    }
+    return CompressionPlan(
+        float_bits=new_floats,
+        int_bits=dict(plan.int_bits),
+        tune_evals=plan.tune_evals,
+    )
+
+
+def repack(tree: Any, plan: CompressionPlan) -> Any:
+    """Re-encode a (partially packed) pytree at ``plan``'s widths.
+
+    ``PackedTensor`` leaves are re-encoded value-by-value (decode at the
+    current width, encode at the plan width) — no re-tuning, which is what
+    makes draft derivation cheap; plain leaves the plan names are packed
+    outright; leaves the plan does not name pass through untouched (packed
+    leaves keep their current width). This is how the draft model of the
+    speculative server derives a second, narrower packed width over the
+    same weight structure."""
+    from repro.core.tensor_store import is_packed, pack_tensor, repack_tensor
+
+    def _one(path, leaf):
+        spec = plan.bits_of(path, leaf)
+        if spec is None:
+            return leaf
+        bits, signed = spec if isinstance(spec, tuple) else (spec, True)
+        if is_packed(leaf):
+            return repack_tensor(leaf, bits)
+        if bits is None or bits >= 32:
+            return leaf
+        return pack_tensor(leaf, bits, signed=signed)
+
+    return jax.tree_util.tree_map_with_path(_one, tree, is_leaf=is_packed)

@@ -67,6 +67,14 @@ FLOAT_LADDER: Tuple[int, ...] = (8, 12, 16, 20, 24, 28, 32)
 
 F32 = FLOAT_FORMATS[32]
 
+
+def ladder_snap(bits: int, below: bool = False) -> int:
+    """Widest Table 3 rung <= ``bits`` (strictly < with ``below``),
+    floored at the narrowest rung — the shared snap used by plan
+    derivation and the speculative draft-width resolution."""
+    rungs = [r for r in FLOAT_LADDER if (r < bits if below else r <= bits)]
+    return rungs[-1] if rungs else FLOAT_LADDER[0]
+
 _U32 = jnp.uint32
 _ONE = np.uint32(1)
 

@@ -53,7 +53,18 @@ class PackedTensor:
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], *aux)
+        bits, kind, signed, logical_shape, out_dtype = aux
+        data = children[0]
+        # Leading (unpacked) dims follow the payload: transforms that
+        # slice or stack the data leaf — lax.scan over stacked layer
+        # weights, vmap batching — rebuild the node with a reshaped
+        # payload, so reconcile everything but the packed (last) axis
+        # from it. A stacked (L, d, f) weight scanned over L then yields
+        # per-layer 2-D PackedTensors that take the fused matmul path.
+        shp = getattr(data, "shape", None)
+        if shp is not None and tuple(shp[:-1]) != tuple(logical_shape[:-1]):
+            logical_shape = tuple(shp[:-1]) + (logical_shape[-1],)
+        return cls(data, bits, kind, signed, logical_shape, out_dtype)
 
     # -- the Value Extractor + Converter path --------------------------------
     def unpack(self) -> jnp.ndarray:
@@ -68,6 +79,31 @@ class PackedTensor:
                 self.out_dtype
             )
         return out.reshape(self.logical_shape)
+
+    def take(self, indices: jnp.ndarray) -> jnp.ndarray:
+        """Gather logical rows (leading-axis entries) from the packed
+        payload and decode *only those rows* — the packed ``embed`` path.
+
+        ``indices`` indexes axis 0 of a >= 2-D packed tensor; the gather
+        runs on the uint32 words (bits/32 of the f32 gather traffic), and
+        the Value Extractor / Converter only ever sees the gathered rows
+        instead of materializing the whole table (important when the table
+        is a 150k-row vocabulary and the gather wants a handful)."""
+        if len(self.logical_shape) < 2:
+            raise ValueError(
+                f"take() needs a leading row axis; shape {self.logical_shape}"
+            )
+        rows = jnp.take(self.data, indices, axis=0)
+        n = self.logical_shape[-1]
+        codes = bitpack.unpack_groups(rows, self.bits, n)
+        if self.kind == "float":
+            out = decode_float(codes, FLOAT_FORMATS[self.bits])
+        else:
+            out = decode_int(codes, self.bits, self.signed)
+        out = out.astype(self.out_dtype)
+        return out.reshape(
+            tuple(jnp.shape(indices)) + self.logical_shape[1:]
+        )
 
     @property
     def nbytes_packed(self) -> int:
@@ -106,6 +142,19 @@ def pack_tensor(
         signed=signed,
         logical_shape=tuple(x.shape),
         out_dtype=out_dtype,
+    )
+
+
+def repack_tensor(pt: PackedTensor, bits: int) -> PackedTensor:
+    """Re-encode a ``PackedTensor`` at a different width *without*
+    re-tuning: decode the stored codes to values, encode at ``bits``.
+    Same kind/signedness/out_dtype; this is the ladder step that derives
+    the speculative draft's weights from the already-packed target."""
+    if bits == pt.bits:
+        return pt
+    return pack_tensor(
+        pt.unpack(), bits, kind=pt.kind, signed=pt.signed,
+        out_dtype=pt.out_dtype,
     )
 
 

@@ -1,11 +1,16 @@
 """Production serving launcher: batched decode with packed KV.
 
     python -m repro.launch.serve --arch qwen3_8b --requests 64 \
-        [--kv-bits 8] [--max-seq-len 2048] [--reduced]
+        [--kv-bits 8] [--max-seq-len 2048] [--reduced] \
+        [--speculative 4] [--draft-bits 12] [--pack-weights]
 
 Sizes the slot count from the residency planner (the Table 1 occupancy
 calculator for chips), runs continuous batching until the request queue
-drains, and reports occupancy + throughput.
+drains, and reports occupancy + throughput. ``--speculative k`` swaps in
+the narrow-draft self-speculative stepper: a draft repacked one ladder
+step down proposes k tokens per tick, the full-width model verifies them
+in one call — emitted tokens are unchanged, ticks drop by the acceptance
+rate.
 """
 from __future__ import annotations
 
@@ -24,10 +29,18 @@ def main() -> None:
     ap.add_argument("--kv-bits", type=int, default=None)
     ap.add_argument("--slots", type=int, default=None)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="draft K tokens/tick through the narrow plan; "
+                         "0 = plain engine")
+    ap.add_argument("--draft-bits", type=int, default=None,
+                    help="draft weight width (default: config knob, else "
+                         "one Table 3 step below weight_bits)")
+    ap.add_argument("--pack-weights", action="store_true",
+                    help="pack target weights at the planned width")
     args = ap.parse_args()
 
     from repro.configs import get_config
-    from repro.serving import ServeEngine
+    from repro.serving import ServeEngine, SpeculativeEngine
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -37,8 +50,15 @@ def main() -> None:
             cfg, compression=dataclasses.replace(
                 cfg.compression, kv_bits=args.kv_bits))
 
-    eng = ServeEngine(cfg, max_seq_len=args.max_seq_len,
-                      max_slots=args.slots or 4)
+    if args.speculative:
+        eng = SpeculativeEngine(
+            cfg, max_seq_len=args.max_seq_len,
+            max_slots=args.slots or 4, k=args.speculative,
+            draft_bits=args.draft_bits, pack_weights=args.pack_weights)
+    else:
+        eng = ServeEngine(cfg, max_seq_len=args.max_seq_len,
+                          max_slots=args.slots or 4,
+                          pack_weights=args.pack_weights)
     rng = np.random.default_rng(0)
     rids = [
         eng.submit(list(rng.integers(1, cfg.vocab_size, 4)),
@@ -52,6 +72,12 @@ def main() -> None:
           f"slots={stats['slots']}; "
           f"planner max sequences (full-scale)="
           f"{stats['residency_max_sequences']}")
+    if args.speculative:
+        print(f"speculative: k={stats['k']} draft_bits={stats['draft_bits']} "
+              f"acceptance={stats['acceptance_rate']:.3f} "
+              f"committed/tick={stats['committed_per_tick']:.2f} "
+              f"draft_weight_bytes={eng.draft_weight_read_bytes} "
+              f"target_weight_bytes={eng.weight_read_bytes}")
 
 
 if __name__ == "__main__":

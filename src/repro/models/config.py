@@ -32,6 +32,12 @@ class CompressionConfig:
     opt_m_bits: Optional[int] = None       # Adam first-moment width
     opt_v_bits: Optional[int] = None       # Adam second-moment width
     master_bits: Optional[int] = None      # master-weight width
+    # speculative serving: width the *draft* model's weights repack to
+    # (``core.compress.derive_plan``). None = one Table 3 ladder step
+    # below ``weight_bits``; the draft proposes, the full-width target
+    # verifies, so this knob trades acceptance rate for draft bytes/token
+    # without ever changing emitted tokens.
+    draft_weight_bits: Optional[int] = None
 
     @property
     def any_packing(self) -> bool:

@@ -18,9 +18,12 @@ Packed-weight dispatch rules (the register-file fusion, end-to-end):
     backward falls back to the materialized unpack+einsum (training keeps
     the old path). ``fallback=True`` forces that legacy path in the
     forward too (escape hatch + parity reference).
+  * ``embed`` with a packed table gathers *rows of packed words* and
+    decodes only the gathered rows (``PackedTensor.take``) — the table
+    itself never materializes; gather traffic drops by bits/32.
   * Everything else — int-kind packed tensors, stacked >= 3-D packed
-    leaves (MoE expert banks), gathers (``embed``), norms/biases — uses
-    ``unpack_maybe`` (the materialized Value Extractor path).
+    leaves (MoE expert banks), norms/biases — uses ``unpack_maybe``
+    (the materialized Value Extractor path).
 
 Sharding is annotated with ``with_sharding_constraint`` using mesh axis
 names; outside a mesh context the constraints are no-ops.
@@ -172,7 +175,14 @@ def mlp(x, w_in, w_gate, w_out, gated: bool, fallback: bool = False):
 def embed(tokens: jnp.ndarray, table) -> jnp.ndarray:
     """Token embedding; table (V, D) sharded over 'model' on V via a
     one-hot matmul-friendly gather (XLA turns take into gather; for TP we
-    keep take and let GSPMD insert the collective)."""
+    keep take and let GSPMD insert the collective).
+
+    A packed table dispatches to ``PackedTensor.take``: gather the packed
+    *words* for the requested rows, decode only those — the (V, D) table
+    never materializes (a decode tick gathers B rows of a 150k-row vocab).
+    """
+    if is_packed(table) and len(table.logical_shape) == 2:
+        return table.take(tokens)
     t = unpack_maybe(table)
     return jnp.take(t, tokens, axis=0)
 

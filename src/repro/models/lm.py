@@ -11,6 +11,13 @@ Public surface (used by train/serve/dryrun):
   * ``loss(params, batch)``   -> scalar LM loss
   * ``prefill(params, batch)``-> (last-token logits, decode state)
   * ``decode_step(params, state, tokens)`` -> (logits, state)
+  * ``verify_step(params, state, tokens)`` -> (all-position logits, state)
+    — multi-token decode (KV-append per position, one call): the
+    speculative-verify / chunked-prefill path
+  * ``prefill_step(params, state, tokens, n_valid)`` -> state — chunked
+    prompt ingestion through the decode KV-append path
+  * ``rollback_decode_state(state, lengths)`` -> state — roll the KV back
+    to per-sequence lengths (speculation rejects)
   * ``init_decode_state(batch, seq_len)``  -> zeroed state (donated arg)
   * ``input_specs(shape)``    -> ShapeDtypeStructs for the dry-run
 """
@@ -439,6 +446,61 @@ class LM:
         logits = self.logits_fn(params, x)
         state = dict(state, len=state["len"] + 1)
         return logits, state
+
+    # ----------------------------------------------- multi-token decode path
+    @property
+    def supports_rollback(self) -> bool:
+        """True when the decode state is entirely KV rows + a length (so a
+        speculative reject is a pure length reset). Recurrent families
+        (ssm / hybrid) fold every token into an O(1) state that cannot be
+        un-folded, so they cannot serve as speculation targets."""
+        return self.cfg.family in ("dense", "moe", "vlm", "encdec")
+
+    def verify_step(self, params, state: Dict,
+                    tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+        """tokens: (B, T) -> (logits (B, T, V), state with len advanced T).
+
+        Scores T positions in one call by scanning the single-token decode
+        body over the token axis — numerically *identical* to T sequential
+        ``decode_step`` calls (same program, same KV-append path), which is
+        what makes greedy speculative decoding exactly lossless. The
+        speculative scheduler rolls ``len`` back afterwards to the
+        accepted prefix; rows past ``len`` are dead (attention masks by
+        length, appends overwrite in place)."""
+        def body(st, tok):
+            logits, st = self.decode_step(params, st, tok[:, None])
+            return st, logits[:, 0]
+
+        state, per_pos = jax.lax.scan(
+            body, state, jnp.moveaxis(tokens, 1, 0))
+        return jnp.moveaxis(per_pos, 0, 1), state
+
+    def prefill_step(self, params, state: Dict, tokens: jnp.ndarray,
+                     n_valid: jnp.ndarray) -> Dict:
+        """Ingest a prompt chunk: tokens (B, C), n_valid (B,) of them real
+        per sequence. Appends through the same KV path as decode and then
+        sets ``len = len_before + n_valid`` — the padding rows land past
+        the valid length, where they are masked out and later overwritten,
+        so sequences with shorter chunks (or none: n_valid = 0) stay
+        byte-exact with never having stepped at all."""
+        len0 = state["len"]
+        _, state = self.verify_step(params, state, tokens)
+        return dict(state, len=len0 + jnp.asarray(n_valid, jnp.int32))
+
+    def rollback_decode_state(self, state: Dict,
+                              lengths: jnp.ndarray) -> Dict:
+        """Roll the cache back to ``lengths`` valid rows per sequence.
+
+        O(1): KV rows are only ever read below ``len`` and the append
+        path writes at ``len``, so discarding speculated rows is a length
+        reset — no data movement (the indirection-table free, Section 3.2
+        style). Only valid for ``supports_rollback`` families."""
+        if not self.supports_rollback:
+            raise ValueError(
+                f"family {self.cfg.family!r} carries recurrent decode "
+                "state; KV-length rollback cannot undo folded tokens"
+            )
+        return dict(state, len=jnp.asarray(lengths, jnp.int32))
 
     # ---------------------------------------------------------- input specs
     def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:

@@ -11,24 +11,39 @@ batch -> each weight read amortized over more tokens -> tokens/s up.
     the occupancy calculator of Table 1, for chips;
   * **continuous batching**: a slot map (the indirection-table analogue —
     logical request -> physical KV slot) admits new requests the moment a
-    slot frees;
+    slot frees; admission and slot queues are deques so a deep backlog
+    costs O(1) per admit, not O(queue);
+  * **chunked prefill**: admitted prompts stream through
+    ``lm.prefill_step`` ``prefill_chunk`` tokens at a time (one jitted
+    multi-token KV-append per chunk), so a long prompt costs
+    ceil(len/chunk) calls instead of one decode tick per prompt token;
   * decode runs one jitted ``decode_step`` over the whole slot array per
-    tick; prefill is token-by-token through the same step (adequate for
-    the CPU-scale tests; the pod-scale prefill path is the dedicated
-    ``prefill`` program in the dry-run).
+    tick. The per-tick token generation lives in ``_generate`` — a
+    pluggable stepper: ``serving.speculative.SpeculativeEngine`` overrides
+    it with a draft-propose / full-width-verify tick that commits several
+    tokens per call.
+
+``pack_weights=True`` packs every matmul-eligible weight at the config's
+planned width (``core.compress.uniform_plan`` + ``repack``), putting the
+fused packed-matmul and packed-embed-gather paths on the serving hot
+path. Sequences must fit ``max_seq_len`` (prompt + new tokens); the
+engine does not evict mid-sequence.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import jit, prng_key
+from repro.core.compress import repack, uniform_plan
 from repro.core.occupancy import TPU_V5E, TPUChipConfig, decode_residency
+from repro.core.tensor_store import tree_bytes
 from repro.models.config import ModelConfig
 from repro.models.lm import LM
 
@@ -43,6 +58,9 @@ class Request:
     done: bool = False
     submitted_at: float = 0.0
     finished_at: float = 0.0
+    # speculative per-request acceptance stats (0/0 on the plain engine)
+    draft_proposed: int = 0
+    draft_accepted: int = 0
 
 
 @dataclasses.dataclass
@@ -54,10 +72,17 @@ class ServeEngine:
     greedy: bool = True
     bos_token: int = 0             # fed when a request has no prompt
     max_results: int = 65536       # finished-output retention (FIFO)
+    pack_weights: bool = False     # pack params at the planned width
+    prefill_chunk: int = 16        # prompt tokens ingested per prefill call
 
     def __post_init__(self):
         self.lm = LM(self.cfg)
         self.params = self.lm.init(prng_key(0))
+        self.weight_plan = None
+        if self.pack_weights:
+            wbits = self.cfg.compression.weight_bits or 16
+            self.weight_plan = uniform_plan(self.params, wbits)
+            self.params = repack(self.params, self.weight_plan)
         kv_bits = self.cfg.compression.kv_bits or 16
         weight_bytes = self.cfg.n_params() * (
             (self.cfg.compression.weight_bits or 16) // 8)
@@ -74,7 +99,10 @@ class ServeEngine:
         if self.cfg.family == "encdec":
             self.state["clen"] = jnp.full((self.n_slots,),
                                           self.cfg.encoder_seq, jnp.int32)
-        self._free = list(range(self.n_slots))
+        # deques: admission pops the head of both queues every _admit —
+        # under a deep backlog list.pop(0) makes each admit O(queue),
+        # visible as tick-time drift in the soak test.
+        self._free: Deque[int] = collections.deque(range(self.n_slots))
         # _active holds only in-flight requests (bounded by n_slots);
         # finished outputs move to _results so per-tick scans stay O(slots)
         # under sustained traffic instead of O(total requests ever served).
@@ -82,16 +110,38 @@ class ServeEngine:
         # bounded too — clients must collect outputs within that window.
         self._active: Dict[int, Request] = {}
         self._results: Dict[int, List[int]] = {}
-        self._queue: List[Request] = []
+        self._queue: Deque[Request] = collections.deque()
         self._next_rid = 0
         self._step = jit(self.lm.decode_step, donate_argnums=(1,))
+        self._prefill = jit(self.lm.prefill_step, donate_argnums=(1,))
         self._last_tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
         self._pending_prefill: Dict[int, List[int]] = {}
         self.ticks = 0
         self.tokens_out = 0
 
     # -- client API -----------------------------------------------------------
+    @property
+    def _seq_headroom(self) -> int:
+        """Extra KV rows a tick may append past the committed length (0
+        here; k for the speculative engine, whose rolled-back rows still
+        occupy slots at the peak)."""
+        return 0
+
     def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
+        # A sequence feeds prompt + all-but-the-last generated token, so
+        # it needs p + m - 1 rows, plus this engine's speculation
+        # headroom. Past max_seq_len the append path would clamp and
+        # silently overwrite the last valid row — refuse instead. Only
+        # linear KV caches can overflow: recurrent state is O(1) in
+        # sequence length and windowed (hybrid) KV wraps.
+        need = (max(len(prompt), 1) + max_new_tokens - 1
+                + self._seq_headroom)
+        if self.lm.supports_rollback and need > self.max_seq_len:
+            raise ValueError(
+                f"request needs {need} KV rows (prompt {len(prompt)} + "
+                f"{max_new_tokens} new + headroom {self._seq_headroom}) "
+                f"but max_seq_len is {self.max_seq_len}"
+            )
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(Request(
@@ -108,26 +158,83 @@ class ServeEngine:
     def occupancy(self) -> float:
         return (self.n_slots - len(self._free)) / self.n_slots
 
+    @property
+    def weight_read_bytes(self) -> int:
+        """Bytes one full weight pass streams (packed where packed)."""
+        return tree_bytes(self.params)[0]
+
     # -- scheduler ------------------------------------------------------------
+    def _reset_slot(self, slot: int) -> None:
+        """Recycle a slot: zero its cache length (rows past len are dead).
+        Overridable — the speculative engine resets its draft cache too."""
+        self.state["len"] = self.state["len"].at[slot].set(0)
+
     def _admit(self) -> None:
+        admitted = False
         while self._queue and self._free:
-            req = self._queue.pop(0)
-            slot = self._free.pop(0)
+            req = self._queue.popleft()
+            slot = self._free.popleft()
             req.slot = slot
             self._active[req.rid] = req
-            # reset this slot's KV length; feed prompt token-by-token.
-            # An empty prompt still needs one deterministic first token —
-            # without it the first tick would replay whatever value the
-            # slot's previous occupant left behind in _last_tokens.
-            self.state["len"] = self.state["len"].at[slot].set(0)
+            admitted = True
+            # reset this slot's KV length; prompt ingestion is chunked
+            # below. An empty prompt still needs one deterministic first
+            # token — without it the first tick would replay whatever
+            # value the slot's previous occupant left in _last_tokens.
+            self._reset_slot(slot)
             self._pending_prefill[req.rid] = (
                 list(req.prompt) or [self.bos_token])
+        # chunked ingestion needs the rollback property (padding rows must
+        # be dead rows); recurrent families fold every fed token into O(1)
+        # state, so they keep the token-by-token replay in _generate.
+        if admitted and self.lm.supports_rollback:
+            self._ingest_prompts()
 
-    def step(self) -> int:
-        """One decode tick for every resident sequence. Returns number of
-        tokens emitted to finished outputs this tick."""
-        if not self._active:
-            return 0
+    def _ingest_prompts(self) -> None:
+        """Stream pending prompts through ``lm.prefill_step`` in chunks of
+        ``prefill_chunk`` tokens, leaving exactly one token pending per
+        request — the next decode tick feeds it and samples the first
+        output (same contract the token-by-token replay had). Slots not
+        prefilling ride along with n_valid = 0: their length is restored
+        inside ``prefill_step`` and the padding rows land past ``len``
+        where they are dead (masked now, overwritten later)."""
+        while True:
+            pending = {
+                rid: toks for rid, toks in self._pending_prefill.items()
+                if len(toks) > 1 and rid in self._active
+            }
+            if not pending:
+                return
+            # bucket the chunk width to a power of two: the jitted
+            # prefill compiles once per distinct (n_slots, chunk) shape,
+            # so raw remainder widths would recompile per prompt length;
+            # padding past n_valid is already free (dead rows)
+            need = min(self.prefill_chunk,
+                       max(len(t) - 1 for t in pending.values()))
+            chunk = 1
+            while chunk < need:
+                chunk *= 2
+            chunk = min(chunk, self.prefill_chunk)
+            tokens = np.zeros((self.n_slots, chunk), np.int32)
+            n_valid = np.zeros((self.n_slots,), np.int32)
+            for rid, toks in pending.items():
+                slot = self._active[rid].slot
+                take = min(chunk, len(toks) - 1)
+                tokens[slot, :take] = toks[:take]
+                n_valid[slot] = take
+                del toks[:take]
+            self._prefill_call(jnp.asarray(tokens), jnp.asarray(n_valid))
+
+    def _prefill_call(self, tokens: jnp.ndarray,
+                      n_valid: jnp.ndarray) -> None:
+        """One chunked KV-append over the slot array. Overridable — the
+        speculative engine mirrors every chunk into its draft cache."""
+        self.state = self._prefill(self.params, self.state, tokens, n_valid)
+
+    def _generate(self) -> Dict[int, List[int]]:
+        """One decode tick: returns the tokens committed per request id.
+        The pluggable stepper — ``SpeculativeEngine`` replaces this with a
+        draft/verify tick that can commit up to k+1 tokens per request."""
         tokens = np.array(self._last_tokens)     # writable host copy
         for req in self._active.values():
             pend = self._pending_prefill.get(req.rid)
@@ -141,19 +248,32 @@ class ServeEngine:
                    prng_key(self.ticks), logits[:, 0, :]
                ).astype(jnp.int32))
         nxt = np.asarray(nxt)
+        out: Dict[int, List[int]] = {}
+        for req in self._active.values():
+            if self._pending_prefill.get(req.rid):
+                continue                   # still prefilling: ignore sample
+            out[req.rid] = [int(nxt[req.slot])]
+        self._last_tokens = jnp.asarray(nxt[:, None].astype(np.int32))
+        return out
+
+    def step(self) -> int:
+        """One tick for every resident sequence. Returns number of tokens
+        emitted to finished outputs this tick."""
+        if not self._active:
+            return 0
+        committed = self._generate()
         emitted = 0
         finished: List[int] = []
-        for req in list(self._active.values()):
-            pend = self._pending_prefill.get(req.rid)
-            if pend:                       # still prefilling: ignore sample
-                continue
-            tok = int(nxt[req.slot])
-            req.output.append(tok)
-            emitted += 1
+        for rid, toks in committed.items():
+            req = self._active[rid]
+            room = req.max_new_tokens - len(req.output)
+            take = toks[:room]
+            req.output.extend(take)
+            emitted += len(take)
             if len(req.output) >= req.max_new_tokens:
                 req.done = True
                 req.finished_at = time.perf_counter()
-                finished.append(req.rid)
+                finished.append(rid)
         for rid in finished:               # evict: _active stays bounded
             req = self._active.pop(rid)
             self._results[rid] = req.output
@@ -161,8 +281,6 @@ class ServeEngine:
             self._pending_prefill.pop(rid, None)
         while len(self._results) > self.max_results:
             self._results.pop(next(iter(self._results)))
-        self._last_tokens = jnp.asarray(
-            np.asarray(nxt)[:, None].astype(np.int32))
         self._admit()
         self.ticks += 1
         self.tokens_out += emitted

@@ -1,0 +1,304 @@
+"""Narrow-draft self-speculative decoding: the quality/width tradeoff as
+a *lossless* speed knob.
+
+The paper buys register-file capacity with "modest output-quality
+degradation" — a narrower static format for the same values. Speculative
+decoding inverts that bargain for serving: a **draft** derivation of the
+same model (weights re-encoded one Table 3 ladder step down via
+``core.compress.derive_plan`` + ``repack`` — no re-tuning) proposes ``k``
+tokens per tick through its own decode state, and the **target** model
+scores all ``k+1`` positions in one ``LM.verify_step`` call. A greedy
+prefix rule (or rejection sampling, when sampling) commits the longest
+agreeing prefix plus one target token, then both KV caches roll back to
+the committed length (``LM.rollback_decode_state`` — a pure length reset,
+because KV rows past ``len`` are dead).
+
+The result: emitted tokens are **exactly** the full-width model's output
+— quality degradation becomes an *acceptance-rate statistic* instead of
+an output artifact — while the narrow model's bytes/token dominates the
+hot path whenever acceptance is high. Per tick the draft streams its
+(narrower) weights k+1 times for single tokens and the target streams its
+weights once for k+1 positions, so target weight bytes per committed
+token beat the plain engine whenever more than one token commits per
+tick, i.e. acceptance > 1/(k+1).
+
+This is the first subsystem where two packed widths of the same model run
+concurrently: the packed store holds both plans over shared structure,
+the fused matmul dispatches each leaf at its own width, and the KV
+machinery appends/rolls back two caches in lockstep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import jit, prng_key
+from repro.core.compress import derive_plan, repack, uniform_plan
+from repro.core.formats import ladder_snap
+from repro.core.tensor_store import tree_bytes
+from repro.serving.engine import ServeEngine
+
+
+def resolve_draft_bits(cfg) -> int:
+    """Draft width: the config's ``draft_weight_bits`` knob, else one
+    Table 3 ladder step below the target's planned weight width."""
+    comp = cfg.compression
+    if comp.draft_weight_bits:
+        return comp.draft_weight_bits
+    return ladder_snap(comp.weight_bits or 16, below=True)
+
+
+@dataclasses.dataclass
+class SpeculativeEngine(ServeEngine):
+    """``ServeEngine`` with the speculative stepper plugged in.
+
+    Per tick and per resident slot: the draft proposes ``k`` tokens, the
+    target verifies ``k+1`` positions in one call, the longest agreeing
+    prefix (plus the target's own next token) commits, and both decode
+    states roll back to the committed length. Greedy outputs are
+    token-for-token identical to the plain engine's; sampling outputs are
+    distributionally identical via rejection sampling. Speculated rows
+    are appended before the roll-back, so ``submit`` requires k extra
+    rows of ``max_seq_len`` headroom beyond the plain engine's
+    prompt + max_new_tokens - 1."""
+
+    k: int = 4                          # drafted tokens per tick
+    draft_bits: Optional[int] = None    # override the config knob
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if not self.lm.supports_rollback:
+            raise ValueError(
+                f"family {self.cfg.family!r} cannot roll its decode state "
+                "back; speculation needs KV-length rollback"
+            )
+        wbits = self.cfg.compression.weight_bits or 16
+        dbits = self.draft_bits or resolve_draft_bits(self.cfg)
+        # snap to the ladder *before* validating or reporting: the packed
+        # store only has Table 3 rungs, and stats must state the width
+        # the weights are actually packed at
+        dbits = ladder_snap(dbits)
+        if dbits >= wbits:
+            raise ValueError(
+                f"draft width {dbits} (ladder-snapped) must be narrower "
+                f"than the target's {wbits}"
+            )
+        self.draft_bits = dbits
+        # Derive the draft's plan from the target's and re-encode the
+        # *existing* leaves (packed target: code-level repack; plain
+        # target: first packing) — never re-tuned.
+        base_plan = self.weight_plan or uniform_plan(self.params, wbits)
+        self.draft_plan = derive_plan(base_plan, wbits - dbits)
+        self.draft_params = repack(self.params, self.draft_plan)
+        self.draft_state = self.lm.init_decode_state(self.n_slots,
+                                                     self.max_seq_len)
+        if self.cfg.family == "encdec":
+            self.draft_state["clen"] = jnp.full(
+                (self.n_slots,), self.cfg.encoder_seq, jnp.int32)
+        self._draft_prefill = jit(self.lm.prefill_step, donate_argnums=(1,))
+        self._verify = jit(self.lm.verify_step, donate_argnums=(1,))
+        self._draft_k = jit(self._make_draft_fn(), donate_argnums=(1,))
+        # engine-level acceptance stats. slot_ticks counts participating
+        # (slot, tick) pairs so per-slot commit averages stay honest under
+        # ragged traffic (drain-phase ticks run partially occupied).
+        self.spec_ticks = 0
+        self.slot_ticks = 0
+        self.proposed = 0
+        self.accepted = 0
+
+    @property
+    def _seq_headroom(self) -> int:
+        return self.k
+
+    # -- draft ---------------------------------------------------------------
+    def _make_draft_fn(self):
+        lm, k, greedy = self.lm, self.k, self.greedy
+
+        def draft_fn(params, state, t0, key):
+            """t0 (B, 1) -> (drafts (B, k), draft logits (B, k, V), state
+            advanced k+1 rows — the extra append stores d_k's KV row so
+            the draft cache mirrors the target's input stream)."""
+            def body(carry, key_i):
+                st, cur = carry
+                logits, st = lm.decode_step(params, st, cur)
+                lg = logits[:, 0]
+                if greedy:
+                    nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                else:
+                    nxt = jax.random.categorical(key_i, lg).astype(jnp.int32)
+                return (st, nxt[:, None]), (nxt, lg)
+
+            keys = jax.random.split(key, k)
+            (st, cur), (drafts, dlogits) = jax.lax.scan(
+                body, (state, t0), keys)
+            _, st = lm.decode_step(params, st, cur)
+            return (jnp.moveaxis(drafts, 0, 1),
+                    jnp.moveaxis(dlogits, 0, 1), st)
+
+        return draft_fn
+
+    # -- the speculative stepper ---------------------------------------------
+    def _generate(self) -> Dict[int, List[int]]:
+        tokens = np.array(self._last_tokens)
+        for req in self._active.values():
+            pend = self._pending_prefill.get(req.rid)
+            if pend:
+                # chunked ingestion left exactly one token: the slot's
+                # first real input. It feeds both models this tick.
+                tokens[req.slot, 0] = pend.pop(0)
+        t0 = jnp.asarray(tokens)
+        len0 = np.asarray(self.state["len"]).astype(np.int64)
+        dlen0 = np.asarray(self.draft_state["len"]).astype(np.int64)
+
+        key = prng_key(0x5bec0 + self.ticks)
+        drafts, dlogits, self.draft_state = self._draft_k(
+            self.draft_params, self.draft_state, t0, key)
+        vt = jnp.concatenate([t0, drafts], axis=1)       # (B, k+1)
+        vlogits, self.state = self._verify(self.params, self.state, vt)
+
+        drafts_np = np.asarray(drafts)
+        if self.greedy:
+            # device-side argmax: bit-identical to the plain engine's
+            # sampling rule on bit-identical logits
+            cand = np.asarray(jnp.argmax(vlogits, axis=-1))  # (B, k+1)
+            commit = self._accept_greedy(drafts_np, cand)
+        else:
+            commit = self._accept_sampled(drafts_np, drafts, vlogits,
+                                          dlogits)
+
+        out: Dict[int, List[int]] = {}
+        commits = np.zeros((self.n_slots,), np.int64)
+        last = np.array(self._last_tokens)
+        for req in self._active.values():
+            b = req.slot
+            toks = commit[b]
+            req.draft_proposed += self.k
+            req.draft_accepted += len(toks) - 1
+            self.proposed += self.k
+            self.accepted += len(toks) - 1
+            self.slot_ticks += 1
+            out[req.rid] = toks
+            commits[b] = len(toks)
+            last[b, 0] = toks[-1]
+        # roll both caches back to the committed length; free slots roll
+        # back to where they started, so their dead rows never accumulate
+        self.state = self.lm.rollback_decode_state(
+            self.state, len0 + commits)
+        self.draft_state = self.lm.rollback_decode_state(
+            self.draft_state, dlen0 + commits)
+        self._last_tokens = jnp.asarray(last)
+        self.spec_ticks += 1
+        return out
+
+    def _accept_greedy(self, drafts: np.ndarray,
+                       cand: np.ndarray) -> List[List[int]]:
+        """Longest agreeing prefix + the target's own next token.
+
+        cand[b, i] is the target's greedy token after consuming inputs
+        [t0, d_1..d_i]; it is only valid while every earlier d matched —
+        the first mismatch position already *is* the target's token there,
+        so it commits and the tail is discarded."""
+        out: List[List[int]] = []
+        for b in range(drafts.shape[0]):
+            toks: List[int] = []
+            for i in range(self.k):
+                t = int(cand[b, i])
+                toks.append(t)
+                if t != int(drafts[b, i]):
+                    break
+            else:
+                toks.append(int(cand[b, self.k]))   # bonus token
+            out.append(toks)
+        return out
+
+    def _accept_sampled(self, drafts_np: np.ndarray, drafts, vlogits,
+                        dlogits) -> List[List[int]]:
+        """Rejection sampling (Leviathan et al.): accept d_i with prob
+        min(1, p_t/p_d); on reject, sample the residual max(0, p_t - p_d)
+        — the committed stream is distributed exactly as the target's.
+
+        Only the drafted tokens' probabilities (B, k) cross to the host
+        up front; full vocab rows transfer lazily — one target+draft row
+        per rejection and one target row per bonus token — instead of the
+        whole (B, k+1, V) tensor every tick."""
+        rng = np.random.default_rng(0x5bec0 + self.ticks)
+        pt = jax.nn.softmax(vlogits.astype(jnp.float32), axis=-1)
+        pd = jax.nn.softmax(dlogits.astype(jnp.float32), axis=-1)
+        idx = drafts[..., None]
+        pt_tok = np.asarray(
+            jnp.take_along_axis(pt[:, :self.k], idx, -1)[..., 0])
+        pd_tok = np.asarray(jnp.take_along_axis(pd, idx, -1)[..., 0])
+        out: List[List[int]] = []
+        for b in range(drafts_np.shape[0]):
+            toks: List[int] = []
+            for i in range(self.k):
+                d = int(drafts_np[b, i])
+                ratio = pt_tok[b, i] / max(pd_tok[b, i], 1e-30)
+                if rng.uniform() < ratio:
+                    toks.append(d)
+                    continue
+                resid = np.maximum(
+                    np.asarray(pt[b, i], np.float64)
+                    - np.asarray(pd[b, i], np.float64), 0.0)
+                z = resid.sum()
+                p = (resid / z if z > 0
+                     else np.asarray(pt[b, i], np.float64))
+                toks.append(int(rng.choice(p.shape[0], p=p / p.sum())))
+                break
+            else:
+                bonus = np.asarray(pt[b, self.k], np.float64)
+                toks.append(int(rng.choice(
+                    bonus.shape[0], p=bonus / bonus.sum())))
+            out.append(toks)
+        return out
+
+    # -- prefill: the draft cache must ingest the same prompts ---------------
+    def _prefill_call(self, tokens: jnp.ndarray,
+                      n_valid: jnp.ndarray) -> None:
+        super()._prefill_call(tokens, n_valid)
+        self.draft_state = self._draft_prefill(
+            self.draft_params, self.draft_state, tokens, n_valid)
+
+    def _reset_slot(self, slot: int) -> None:
+        super()._reset_slot(slot)         # draft cache length resets too
+        self.draft_state["len"] = self.draft_state["len"].at[slot].set(0)
+
+    # -- stats ----------------------------------------------------------------
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted drafts / proposed drafts (quality as a statistic)."""
+        return self.accepted / max(self.proposed, 1)
+
+    @property
+    def committed_per_tick(self) -> float:
+        return self.tokens_out / max(self.spec_ticks, 1)
+
+    @property
+    def committed_per_slot_tick(self) -> float:
+        """Mean tokens committed per participating (slot, tick) pair —
+        the amortization factor of one verify call, robust to ragged
+        occupancy (drain-phase ticks run partially occupied)."""
+        return self.tokens_out / max(self.slot_ticks, 1)
+
+    @property
+    def draft_weight_read_bytes(self) -> int:
+        return tree_bytes(self.draft_params)[0]
+
+    def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
+        stats = super().run_until_drained(max_ticks)
+        stats.update(
+            k=self.k,
+            draft_bits=self.draft_bits,
+            acceptance_rate=self.acceptance_rate,
+            committed_per_tick=self.committed_per_tick,
+            committed_per_slot_tick=self.committed_per_slot_tick,
+            proposed=self.proposed,
+            accepted=self.accepted,
+        )
+        return stats

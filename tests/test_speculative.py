@@ -1,0 +1,340 @@
+"""Speculative serving: plan derivation, repack, packed embed gather,
+multi-token verify/prefill, and the engine-level exactness property —
+greedy speculative output must be token-for-token identical to the plain
+engine across prompt lengths, k, draft widths, and families."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import prng_key
+from repro.configs import get_config
+from repro.core.compress import CompressionPlan, derive_plan, repack, \
+    uniform_plan
+from repro.core.formats import FLOAT_LADDER
+from repro.core.tensor_store import (
+    is_packed,
+    pack_tensor,
+    repack_tensor,
+    tree_bytes,
+)
+from repro.models import layers as L
+from repro.models.lm import LM
+from repro.serving import ServeEngine, SpeculativeEngine, resolve_draft_bits
+
+
+def _tiny_cfg(name="qwen3_8b"):
+    return get_config(name).reduced()
+
+
+# -- plan derivation ----------------------------------------------------------
+
+def test_derive_plan_steps_down_ladder_and_floors():
+    plan = CompressionPlan(
+        float_bits={"a": 16, "b": 8, "c": 32},
+        int_bits={"i": (12, False)},
+    )
+    d = derive_plan(plan, 4)
+    assert d.float_bits == {"a": 12, "b": 8, "c": 28}
+    assert d.int_bits == {"i": (12, False)}       # ints never narrow
+    d2 = derive_plan(plan, 8)
+    assert d2.float_bits == {"a": 8, "b": 8, "c": 24}
+    # delta 0 keeps every width
+    assert derive_plan(plan, 0).float_bits == plan.float_bits
+    with pytest.raises(ValueError):
+        derive_plan(plan, -4)
+
+
+def test_uniform_plan_targets_matmul_leaves_only():
+    tree = {
+        "w": jnp.ones((8, 64), jnp.float32),
+        "norm": jnp.ones((64,), jnp.float32),
+        "idx": jnp.ones((8, 64), jnp.int32),
+    }
+    plan = uniform_plan(tree, 16)
+    assert plan.float_bits == {"w": 16}
+    assert uniform_plan(tree, 32).float_bits == {}
+
+
+def test_repack_tensor_reencodes_values():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+    p16 = pack_tensor(x, 16)
+    p12 = repack_tensor(p16, 12)
+    assert p12.bits == 12
+    # definition: decode current codes, encode at the new width
+    ref = pack_tensor(p16.unpack(), 12)
+    assert jnp.array_equal(p12.data, ref.data)
+    assert jnp.array_equal(p12.unpack(), ref.unpack())
+    assert repack_tensor(p16, 16) is p16          # no-op fast path
+
+
+def test_repack_tree_handles_packed_and_plain_leaves():
+    rng = np.random.default_rng(1)
+    tree = {
+        "packed": pack_tensor(
+            jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32)),
+            16),
+        "plain": jnp.asarray(
+            rng.standard_normal((4, 64)).astype(np.float32)),
+        "norm": jnp.ones((64,), jnp.float32),     # not in the plan
+    }
+    plan = CompressionPlan(float_bits={"packed": 12, "plain": 12},
+                           int_bits={})
+    out = repack(tree, plan)
+    assert out["packed"].bits == 12 and out["plain"].bits == 12
+    assert out["norm"] is tree["norm"]
+    packed_b, logical_b = tree_bytes(out)
+    assert packed_b < logical_b
+
+
+# -- packed embed gather (satellite: ROADMAP open item) -----------------------
+
+@pytest.mark.parametrize("bits", [8, 12, 16, 20])
+def test_packed_embed_gather_parity(bits):
+    rng = np.random.default_rng(2)
+    table = jnp.asarray(rng.standard_normal((96, 64)).astype(np.float32))
+    pt = pack_tensor(table, bits)
+    toks = jnp.asarray(rng.integers(0, 96, (3, 5)), jnp.int32)
+    got = L.embed(toks, pt)
+    ref = jnp.take(pt.unpack(), toks, axis=0)     # materialized path
+    assert got.shape == (3, 5, 64)
+    assert jnp.array_equal(got, ref)              # same codes, same decode
+    # 1-D index vector too
+    v = jnp.asarray([0, 95, 7], jnp.int32)
+    assert jnp.array_equal(L.embed(v, pt), jnp.take(pt.unpack(), v, 0))
+
+
+def test_packed_take_int_kind():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-100, 100, (32, 64)), jnp.int32)
+    pt = pack_tensor(x, 8, kind="int", signed=True)
+    idx = jnp.asarray([5, 0, 31], jnp.int32)
+    assert jnp.array_equal(pt.take(idx), jnp.take(pt.unpack(), idx, 0))
+
+
+def test_packed_take_requires_row_axis():
+    pt = pack_tensor(jnp.ones((64,), jnp.float32), 16)
+    with pytest.raises(ValueError):
+        pt.take(jnp.asarray([0]))
+
+
+# -- multi-token decode: verify_step / prefill_step ---------------------------
+
+def test_verify_step_matches_sequential_decode_bitwise():
+    cfg = _tiny_cfg()
+    lm = LM(cfg)
+    params = lm.init(prng_key(0))
+    B, S, T = 3, 32, 5
+    rng = np.random.default_rng(4)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, T)), jnp.int32)
+
+    step = jax.jit(lm.decode_step)
+    st_seq = lm.init_decode_state(B, S)
+    outs = []
+    for i in range(T):
+        lg, st_seq = step(params, st_seq, toks[:, i:i + 1])
+        outs.append(lg[:, 0])
+    seq = jnp.stack(outs, 1)
+
+    vl, st_v = jax.jit(lm.verify_step)(params, lm.init_decode_state(B, S),
+                                       toks)
+    assert jnp.array_equal(seq, vl)
+    assert jnp.array_equal(st_seq["len"], st_v["len"])
+    assert jnp.array_equal(st_seq["kv"]["k"], st_v["kv"]["k"])
+
+
+def test_prefill_step_chunked_matches_sequential():
+    cfg = _tiny_cfg()
+    lm = LM(cfg)
+    params = lm.init(prng_key(0))
+    B, S, C = 2, 32, 6
+    rng = np.random.default_rng(5)
+    toks = np.zeros((B, C), np.int32)
+    n_valid = np.asarray([4, 0], np.int32)        # slot 1 rides along idle
+    toks[0, :4] = rng.integers(1, cfg.vocab_size, 4)
+
+    st = lm.prefill_step(params, lm.init_decode_state(B, S),
+                         jnp.asarray(toks), jnp.asarray(n_valid))
+    assert np.asarray(st["len"]).tolist() == [4, 0]
+
+    st_ref = lm.init_decode_state(B, S)
+    for i in range(4):
+        _, st_ref = lm.decode_step(params, st_ref,
+                                   jnp.asarray(toks[:, i:i + 1]))
+    # valid rows of the prefilled slot match the sequential feed
+    k_chunk = np.asarray(st["kv"]["k"])[:, 0, :4]
+    k_ref = np.asarray(st_ref["kv"]["k"])[:, 0, :4]
+    assert np.array_equal(k_chunk, k_ref)
+
+
+def test_rollback_is_length_reset_and_gated_by_family():
+    cfg = _tiny_cfg()
+    lm = LM(cfg)
+    st = lm.init_decode_state(2, 16)
+    st = lm.rollback_decode_state(dict(st, len=jnp.asarray([5, 7])),
+                                  np.asarray([2, 7]))
+    assert np.asarray(st["len"]).tolist() == [2, 7]
+    ssm = LM(_tiny_cfg("falcon_mamba_7b"))
+    assert not ssm.supports_rollback
+    with pytest.raises(ValueError):
+        ssm.rollback_decode_state(ssm.init_decode_state(1, 8), [0])
+
+
+# -- the exactness property ---------------------------------------------------
+
+def _drain_pair(cfg, prompts, max_new, k, draft_bits=None,
+                pack_weights=False, slots=3, seq=128):
+    base = ServeEngine(cfg, max_seq_len=seq, max_slots=slots,
+                       pack_weights=pack_weights)
+    rb = [base.submit(p, max_new_tokens=max_new) for p in prompts]
+    base.run_until_drained()
+    spec = SpeculativeEngine(cfg, max_seq_len=seq, max_slots=slots, k=k,
+                             draft_bits=draft_bits,
+                             pack_weights=pack_weights)
+    rs = [spec.submit(p, max_new_tokens=max_new) for p in prompts]
+    spec.run_until_drained()
+    return base, rb, spec, rs
+
+
+def _prompt_mix(cfg):
+    """Empty, short, chunk-boundary and multi-chunk prompt lengths."""
+    rng = np.random.default_rng(11)
+    lens = [0, 1, 3, 15, 16, 17, 40]
+    return [list(rng.integers(1, cfg.vocab_size, n)) for n in lens]
+
+
+@pytest.mark.parametrize("k,draft_bits", [(1, None), (2, 8), (4, None)])
+def test_greedy_speculative_exactness(k, draft_bits):
+    cfg = _tiny_cfg()
+    prompts = _prompt_mix(cfg)
+    base, rb, spec, rs = _drain_pair(cfg, prompts, 8, k, draft_bits)
+    for a, b in zip(rb, rs):
+        assert base.result(a) == spec.result(b), (k, draft_bits)
+    # speculation must not need more ticks than one-token-per-tick decode
+    assert spec.ticks <= base.ticks
+    assert 0 < spec.accepted <= spec.proposed
+
+
+def test_greedy_speculative_exactness_packed_target():
+    cfg = _tiny_cfg()
+    prompts = _prompt_mix(cfg)[:4]
+    base, rb, spec, rs = _drain_pair(cfg, prompts, 6, 2, pack_weights=True)
+    for a, b in zip(rb, rs):
+        assert base.result(a) == spec.result(b)
+    # two packed widths of the same structure run concurrently
+    assert spec.draft_weight_read_bytes < spec.weight_read_bytes
+
+
+@pytest.mark.parametrize("arch", ["deepseek_moe_16b", "whisper_small"])
+def test_greedy_speculative_exactness_other_families(arch):
+    cfg = _tiny_cfg(arch)
+    rng = np.random.default_rng(13)
+    prompts = [list(rng.integers(1, cfg.vocab_size, n))
+               for n in (0, 2, 9)]
+    base, rb, spec, rs = _drain_pair(cfg, prompts, 4, 2, slots=2, seq=64)
+    for a, b in zip(rb, rs):
+        assert base.result(a) == spec.result(b)
+
+
+def test_speculative_refuses_recurrent_families():
+    with pytest.raises(ValueError, match="roll"):
+        SpeculativeEngine(_tiny_cfg("falcon_mamba_7b"), max_seq_len=32,
+                          max_slots=2)
+
+
+def test_speculative_rejects_non_narrowing_draft():
+    with pytest.raises(ValueError, match="narrower"):
+        SpeculativeEngine(_tiny_cfg(), max_seq_len=32, max_slots=2,
+                          draft_bits=16)
+
+
+def test_off_ladder_draft_bits_snaps_before_reporting():
+    """An off-ladder width must snap down to a Table 3 rung and report
+    the width the weights are actually packed at."""
+    spec = SpeculativeEngine(_tiny_cfg(), max_seq_len=32, max_slots=2,
+                             draft_bits=14)
+    assert spec.draft_bits == 12
+    packed_bits = {l.bits for l in jax.tree_util.tree_leaves(
+        spec.draft_params, is_leaf=is_packed) if is_packed(l)}
+    assert packed_bits == {12}
+
+
+def test_submit_refuses_requests_without_kv_headroom():
+    """Appends past max_seq_len would clamp and overwrite the last valid
+    KV row — both engines must refuse at submit time, the speculative one
+    accounting for its k rolled-back rows at the peak."""
+    cfg = _tiny_cfg()
+    base = ServeEngine(cfg, max_seq_len=32, max_slots=2)
+    base.submit([1] * 25, max_new_tokens=8)       # 25+8-1 = 32: fits
+    with pytest.raises(ValueError, match="KV rows"):
+        base.submit([1] * 26, max_new_tokens=8)   # 33 rows: refused
+    spec = SpeculativeEngine(cfg, max_seq_len=32, max_slots=2, k=4)
+    spec.submit([1] * 21, max_new_tokens=8)       # 21+8-1+4 = 32: fits
+    with pytest.raises(ValueError, match="headroom"):
+        spec.submit([1] * 25, max_new_tokens=8)   # fits plain, not spec
+
+
+def test_recurrent_families_accept_long_prompts():
+    """O(1)-state families have no KV rows to overflow — the headroom
+    check must not refuse prompts longer than max_seq_len there."""
+    eng = ServeEngine(_tiny_cfg("falcon_mamba_7b"), max_seq_len=16,
+                      max_slots=2)
+    rid = eng.submit([1] * 40, max_new_tokens=3)
+    eng.run_until_drained()
+    assert len(eng.result(rid)) == 3
+
+
+def test_resolve_draft_bits_knob_and_ladder_default():
+    cfg = _tiny_cfg()
+    assert resolve_draft_bits(cfg) == 12          # config knob (qwen3)
+    comp = dataclasses.replace(cfg.compression, draft_weight_bits=None)
+    assert resolve_draft_bits(
+        dataclasses.replace(cfg, compression=comp)) == 12  # ladder step
+    comp8 = dataclasses.replace(cfg.compression, draft_weight_bits=None,
+                                weight_bits=8)
+    assert resolve_draft_bits(
+        dataclasses.replace(cfg, compression=comp8)) == FLOAT_LADDER[0]
+
+
+def test_per_request_acceptance_stats():
+    cfg = _tiny_cfg()
+    spec = SpeculativeEngine(cfg, max_seq_len=64, max_slots=2, k=2)
+    rid = spec.submit([1, 2, 3], max_new_tokens=6)
+    req = spec._active[rid]
+    spec.run_until_drained()
+    assert req.draft_proposed > 0
+    assert 0 <= req.draft_accepted <= req.draft_proposed
+    assert spec.proposed >= req.draft_proposed
+    assert 0.0 <= spec.acceptance_rate <= 1.0
+
+
+def test_sampled_speculation_completes():
+    """Rejection sampling commits 1..k+1 tokens per tick and drains."""
+    cfg = _tiny_cfg()
+    spec = SpeculativeEngine(cfg, max_seq_len=64, max_slots=2, k=2,
+                             greedy=False)
+    rids = [spec.submit([1 + i], max_new_tokens=5) for i in range(4)]
+    spec.run_until_drained()
+    assert all(len(spec.result(r)) == 5 for r in rids)
+
+
+def test_engine_queues_are_deques_and_fifo():
+    import collections
+    cfg = _tiny_cfg()
+    eng = ServeEngine(cfg, max_seq_len=32, max_slots=2)
+    assert isinstance(eng._queue, collections.deque)
+    assert isinstance(eng._free, collections.deque)
+    rids = [eng.submit([1], max_new_tokens=1) for _ in range(6)]
+    admitted_order = []
+    seen = set()
+    while eng._queue or eng._active:
+        for rid in eng._active:
+            if rid not in seen:
+                seen.add(rid)
+                admitted_order.append(rid)
+        eng.step()
+    assert admitted_order == sorted(admitted_order)  # FIFO admission
+    assert all(eng.result(r) is not None for r in rids)
