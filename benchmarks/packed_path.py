@@ -15,11 +15,22 @@ every matmul weight at the config's planned width, and measures:
     number and the kernel-parity row validates the fused path itself);
   * **fused-kernel parity** in Pallas interpret mode on a small slice of
     the chain, so the row that claims the fused path works is backed by
-    an actual kernel execution.
+    an actual kernel execution — one row for the 2-D kernel, one for the
+    batched-expert orientation;
+  * a **MoE row**: the per-decode-step expert-bank matmul chain at
+    reduced ``deepseek_moe_16b`` scale through ``layers.expert_linear``
+    (packed banks stream through the batched fused kernel) — weight-read
+    bytes packed vs. f32 plus tokens/s both ways;
+  * a **train-step row**: one forward+backward through the packed chain.
+    With the fused backward, dx streams the packed words a second time
+    instead of materializing W, so train-step weight-read bytes are
+    2 x packed (vs. 2 x f32 dense) — the bits/32 saving now covers
+    training too.
 
-Writes ``BENCH_packed_path.json`` (one object per config) into the
-current directory so CI can archive the perf trajectory, and returns the
-usual ``(name, us, derived)`` CSV rows.
+Writes ``BENCH_packed_path.json`` (one object per config, plus ``moe``
+and ``train_step`` objects) into the current directory so CI can archive
+the perf trajectory, and returns the usual ``(name, us, derived)`` CSV
+rows.
 """
 from __future__ import annotations
 
@@ -35,10 +46,12 @@ from repro.configs import get_config
 from repro.core.tensor_store import pack_tensor
 from repro.kernels import ops as kops
 from repro.kernels import ref as R
-from repro.kernels.packed_matmul import packed_matmul
+from repro.kernels.packed_matmul import packed_matmul, packed_matmul_batched
 from repro.models import layers as L
 
 CONFIGS = ("qwen3_8b", "phi3_medium_14b", "stablelm_12b")
+MOE_CONFIG = "deepseek_moe_16b"
+TRAIN_CONFIG = "qwen3_8b"
 BATCH = 8
 ARTIFACT = "BENCH_packed_path.json"
 
@@ -124,6 +137,45 @@ def _fused_parity_err(rng) -> float:
     return float(jnp.max(jnp.abs(got - ref)))
 
 
+def _batched_parity_err(rng) -> float:
+    """Max |fused - oracle| for the batched-expert orientation."""
+    bits, e, c, k, n = 16, 3, 5, 64, 96
+    x = jnp.asarray(rng.standard_normal((e, c, k)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((e, k, n)) * 0.3
+                     ).astype(np.float32))
+    wp = R.pack_ref(w, bits)
+    got = packed_matmul_batched(x, wp, bits, n, bm=8, bn=32, bk=32,
+                                interpret=True)
+    ref = R.packed_matmul_batched_ref(x, wp, bits, n)
+    return float(jnp.max(jnp.abs(got - ref)))
+
+
+def _moe_bank_weights(cfg, rng) -> List[Dict]:
+    """Per-layer stacked expert banks for one MoE decode step's FFN."""
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    return [
+        {
+            "w_in": (rng.standard_normal((e, d, f)) * 0.05
+                     ).astype(np.float32),
+            "w_gate": (rng.standard_normal((e, d, f)) * 0.05
+                       ).astype(np.float32),
+            "w_out": (rng.standard_normal((e, f, d)) * 0.05
+                      ).astype(np.float32),
+        }
+        for _ in range(cfg.n_layers)
+    ]
+
+
+def _moe_chain_fn():
+    def run(x, layers):
+        for lw in layers:
+            h = L.expert_linear(x, lw["w_in"])
+            g = L.expert_linear(x, lw["w_gate"])
+            x = x + L.expert_linear(jax.nn.silu(g) * h, lw["w_out"])
+        return x
+    return run
+
+
 def bench_packed_path() -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
     rng = np.random.default_rng(0)
@@ -134,6 +186,11 @@ def bench_packed_path() -> List[Tuple[str, float, str]]:
     rows.append(("packed_path.fused_kernel_parity_interpret", 0.0,
                  f"max_abs_err={err:.2e}"))
     assert err < 1e-4, f"fused kernel diverged from oracle: {err}"
+
+    berr = _batched_parity_err(rng)
+    rows.append(("packed_path.batched_kernel_parity_interpret", 0.0,
+                 f"max_abs_err={berr:.2e}"))
+    assert berr < 1e-4, f"batched fused kernel diverged from oracle: {berr}"
 
     for name in CONFIGS:
         full = get_config(name)
@@ -180,6 +237,84 @@ def bench_packed_path() -> List[Tuple[str, float, str]]:
             "full_config_weight_read_bytes_bf16":
                 full.n_active_params() * 2,
         })
+
+    # -- MoE row: expert banks through the batched fused dispatch ---------
+    full = get_config(MOE_CONFIG)
+    cfg = full.reduced()
+    wbits = cfg.compression.weight_bits or 16
+    banks = _moe_bank_weights(cfg, rng)
+    p_banks = [{k: pack_tensor(jnp.asarray(v), wbits) for k, v in lw.items()}
+               for lw in banks]
+    cap = max(BATCH // cfg.n_experts, 1)
+    moe_tokens = cfg.n_experts * cap        # tokens the step really runs
+    xm = jnp.asarray(rng.standard_normal(
+        (cfg.n_experts, cap, cfg.d_model)).astype(np.float32))
+    moe_step = jax.jit(_moe_chain_fn())
+    us_d = _time(moe_step, xm, banks) * 1e6
+    us_p = _time(moe_step, xm, p_banks) * 1e6
+    read_p, f32_b = _weight_bytes(p_banks, np.zeros((0,), np.float32))
+    read_d, _ = _weight_bytes(banks, np.zeros((0,), np.float32))
+    ratio = read_p / max(f32_b, 1)
+    rows.append((
+        f"packed_path.{MOE_CONFIG}.moe_step", us_p,
+        f"tokens_per_s={moe_tokens / (us_p * 1e-6):.1f};"
+        f"dense={moe_tokens / (us_d * 1e-6):.1f};"
+        f"weight_read_bytes={read_p};bytes_ratio_vs_f32={ratio:.3f}",
+    ))
+    artifact["moe"] = {
+        "config": MOE_CONFIG,
+        "weight_bits": wbits,
+        "n_experts": cfg.n_experts,
+        "n_layers": cfg.n_layers,
+        "weight_read_bytes_packed": read_p,
+        "weight_read_bytes_dense": read_d,
+        "weight_read_bytes_f32": f32_b,
+        "bytes_ratio_vs_f32": ratio,
+        "us_per_step_packed": us_p,
+        "us_per_step_dense": us_d,
+        "full_config_weight_read_bytes_packed":
+            full.n_active_params() * wbits // 8,
+        "full_config_weight_read_bytes_bf16": full.n_active_params() * 2,
+    }
+
+    # -- train-step row: forward + fused backward weight stream -----------
+    full = get_config(TRAIN_CONFIG)
+    cfg = full.reduced()
+    wbits = cfg.compression.weight_bits or 16
+    layers, head = _decode_chain_weights(cfg, rng)
+    p_layers, p_head = _pack_chain(layers, head, wbits)
+    xt = jnp.asarray(
+        rng.standard_normal((BATCH, cfg.d_model)).astype(np.float32))
+    chain = _chain_fn(cfg.gated_mlp)
+    grad_step = jax.jit(jax.grad(
+        lambda x, ls, hd: chain(x, ls, hd).astype(jnp.float32).sum()))
+    us_d = _time(grad_step, xt, layers, head) * 1e6
+    us_p = _time(grad_step, xt, p_layers, p_head) * 1e6
+    read_p, f32_b = _weight_bytes(p_layers, p_head)
+    # forward + dx backward each stream every weight once; with the fused
+    # backward both streams are packed words (materialized would pay f32
+    # on the way back)
+    train_p, train_f32 = 2 * read_p, 2 * f32_b
+    ratio = train_p / max(train_f32, 1)
+    rows.append((
+        f"packed_path.{TRAIN_CONFIG}.train_step", us_p,
+        f"us_dense={us_d:.0f};train_weight_read_bytes={train_p};"
+        f"bytes_ratio_vs_f32={ratio:.3f}",
+    ))
+    artifact["train_step"] = {
+        "config": TRAIN_CONFIG,
+        "weight_bits": wbits,
+        "n_layers": cfg.n_layers,
+        "train_weight_read_bytes_packed": train_p,
+        "train_weight_read_bytes_f32": train_f32,
+        "bytes_ratio_vs_f32": ratio,
+        "us_per_step_packed": us_p,
+        "us_per_step_dense": us_d,
+        "full_config_train_weight_read_bytes_packed":
+            2 * full.n_active_params() * wbits // 8,
+        "full_config_train_weight_read_bytes_bf16":
+            2 * full.n_active_params() * 2,
+    }
 
     with open(ARTIFACT, "w") as f:
         json.dump(artifact, f, indent=2)

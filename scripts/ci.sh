@@ -29,7 +29,10 @@ if ! $smoke_only; then
 
     echo "== benchmark smoke (micro + perf + packed path + speculative) =="
     # packed_path runs the fused kernel in Pallas interpret mode for the
-    # parity row and (re)writes BENCH_packed_path.json as a CI artifact;
+    # parity rows (2-D and batched-expert orientations), benchmarks the
+    # MoE expert-bank chain and one train step (forward + fused backward
+    # weight stream), and (re)writes BENCH_packed_path.json as a CI
+    # artifact;
     # speculative drains the same traffic through the plain and the
     # narrow-draft engines, asserts greedy outputs identical, and writes
     # BENCH_speculative.json (acceptance rate + bytes/committed token).

@@ -264,8 +264,11 @@ def uniform_plan(tree: Any, bits: int, min_ndim: int = 2) -> CompressionPlan:
     ``ndim >= min_ndim`` (matmul weights / embedding tables; unstacked
     norms and biases stay at the compute dtype — layer-stacked (L, d)
     norm scales ride along deliberately, they decode on the cheap
-    materialized path). Used where a tuned plan is not available but the
-    config pins a deployment width (``weight_bits``)."""
+    materialized path). MoE expert banks are covered the same way: a
+    (E, d, f) bank — or the layer-stacked (L, E, d, f) leaf — packs along
+    its last axis and dispatches onto the batched fused kernel at decode
+    time. Used where a tuned plan is not available but the config pins a
+    deployment width (``weight_bits``)."""
     from repro.core.tensor_store import is_packed
 
     float_bits: Dict[str, int] = {}
@@ -291,7 +294,13 @@ def derive_plan(plan: CompressionPlan, delta_bits: int = 4) -> CompressionPlan:
     the Table 3 ladder (snapped to the widest rung <= width - delta_bits,
     floored at the narrowest rung) without re-running precision tuning.
     Integer widths come from range analysis and are exact — narrowing them
-    would corrupt values, so they are carried over unchanged."""
+    would corrupt values, so they are carried over unchanged.
+
+    The result never aliases the source plan's mutable state: even when
+    every leaf is already at the AF8 floor (or ``delta_bits == 0``) the
+    derived plan is a distinct-but-equal object with fresh dicts, so
+    mutating one plan (e.g. a tuner revising the target) cannot silently
+    rewrite the other's widths."""
     if delta_bits < 0:
         raise ValueError(f"delta_bits must be >= 0, got {delta_bits}")
     new_floats: Dict[str, int] = {
@@ -312,9 +321,12 @@ def repack(tree: Any, plan: CompressionPlan) -> Any:
     current width, encode at the plan width) — no re-tuning, which is what
     makes draft derivation cheap; plain leaves the plan names are packed
     outright; leaves the plan does not name pass through untouched (packed
-    leaves keep their current width). This is how the draft model of the
-    speculative server derives a second, narrower packed width over the
-    same weight structure."""
+    leaves keep their current width). A packed leaf already *at* the plan
+    width is returned as-is (``repack_tensor``'s no-op fast path): the
+    decode→encode round trip is skipped entirely, so repeatedly applying
+    the same plan accumulates zero re-encoding error and costs nothing.
+    This is how the draft model of the speculative server derives a
+    second, narrower packed width over the same weight structure."""
     from repro.core.tensor_store import is_packed, pack_tensor, repack_tensor
 
     def _one(path, leaf):

@@ -78,6 +78,31 @@ def packed_matmul(x, w_packed, bits: int, n: int, transpose: bool = False):
     return _ref.packed_matmul_ref(x, w_packed, bits, n, transpose)
 
 
+def packed_matmul_batched(x, w_packed, bits: int, n: int,
+                          transpose: bool = False):
+    """Fused unpack+matmul over a leading expert axis (the MoE expert-bank
+    hot path): x (E, C, K), w_packed (E, K, n*bits/32) uint32 (or
+    (E, n, K*bits/32) when ``transpose``) -> (E, C, n)."""
+    if BACKEND.use_pallas:
+        from repro.kernels.packed_matmul import (
+            packed_matmul_batched as _k,
+        )
+        return _k(x, w_packed, bits, n, transpose=transpose,
+                  interpret=BACKEND.interpret)
+    return _ref.packed_matmul_batched_ref(x, w_packed, bits, n, transpose)
+
+
+def packed_matmul_dw(x, g, transpose: bool = False, batched: bool = False):
+    """Weight cotangent of the fused matmul, from residuals alone. No
+    Pallas kernel exists (or is needed): there is no packed operand to
+    stream — dW contracts the saved x against the upstream cotangent g
+    without ever touching W, so XLA's plain dot is already the fused
+    form. This is the backward's "packed-aware" accumulation: the only
+    weight bytes a train step reads are the packed words the forward and
+    the dx kernels stream."""
+    return _ref.packed_matmul_dw_ref(x, g, transpose, batched)
+
+
 def kv_decode(q, k_packed, v_packed, kv_len, bits: int, d: int):
     if BACKEND.use_pallas:
         from repro.kernels.kv_decode import kv_decode as _k

@@ -39,10 +39,22 @@ multiples of 128 and group-aligned packed-axis blocks (multiples of 32
 codes, a layout constraint of ``bitpack.pack_groups``).
 
 ``interpret=None`` resolves through ``repro.compat.pallas``: compiled on
-a real TPU, interpret (Python validation) everywhere else. The kernel is
-decode/inference-forward only — the training path keeps the materialized
-unpack (see ``models.layers``), which is why ``layers`` wraps this in a
-``custom_vjp`` whose backward uses the unpacked oracle.
+a real TPU, interpret (Python validation) everywhere else.
+
+``packed_matmul_batched`` is the same fusion with a leading expert axis:
+the grid gains an expert dimension and every (x, w, out) block carries an
+expert coordinate, so stacked MoE expert banks ``(E, K, N)`` stream their
+packed words per expert exactly like dense 2-D weights — this is what
+``models.blocks.moe_ffn`` dispatches 3-D float ``PackedTensor`` banks
+onto, including per-layer banks yielded by the stacked-layer ``lax.scan``.
+
+Both kernels also serve the *training backward*: ``models.layers`` wraps
+them in ``custom_vjp``s whose dx is the same kernel with the orientation
+flipped (dx = g @ Wᵀ contracts over the packed axis of a normal-orientation
+weight and vice versa), so the backward streams packed words too instead
+of materializing W (weight-read bytes drop by bits/32 in training as
+well). dW never reads W at all — it accumulates from the (x, g) residuals
+(``kernels.ops.packed_matmul_dw``).
 """
 from __future__ import annotations
 
@@ -214,3 +226,130 @@ def packed_matmul(
     )(x2, wp)
 
     return out[:m, :n].reshape(lead + (n,))
+
+
+# ---------------------------------------------------------------------------
+# Batched-expert orientation: grid over a leading expert axis
+# ---------------------------------------------------------------------------
+
+def _bmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, bits: int, bn: int,
+                k_steps: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = bitpack.unpack_groups(w_ref[0], bits, bn)
+    w = decode_float(codes, FLOAT_FORMATS[bits])          # (bk, bn) f32
+    x = x_ref[0].astype(jnp.float32)                      # (bm, bk)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _bmm_t_kernel(x_ref, w_ref, o_ref, acc_ref, *, bits: int, bk: int,
+                  k_steps: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = bitpack.unpack_groups(w_ref[0], bits, bk)
+    w = decode_float(codes, FLOAT_FORMATS[bits])          # (bn, bk) f32
+    x = x_ref[0].astype(jnp.float32)                      # (bm, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),                   # x @ w.T
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "n", "transpose", "bm", "bn", "bk",
+                     "out_dtype", "interpret"),
+)
+def packed_matmul_batched(
+    x: jnp.ndarray,            # (E, C, K) f32/bf16
+    w_packed: jnp.ndarray,     # (E, K, ceil(N/32)*bits) uint32, or
+                               # (E, N, ceil(K/32)*bits) when transpose
+    bits: int,
+    n: int,                    # logical output features N (per expert)
+    transpose: bool = False,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Per-expert ``x[e] @ W[e]`` (or ``x[e] @ W[e].T``) without
+    materializing any expert's weights.
+
+    The grid is (E, C/bm, N/bn, K/bk) — the expert axis leads, K stays
+    innermost for the scratch accumulation — and each block spec carries
+    the expert coordinate, so an expert's packed words expand in VMEM only
+    while that expert's grid slice is resident. Block planning per expert
+    is identical to the 2-D kernel (divisor selection, zero-pad fallback,
+    group-of-32-aligned packed-axis blocks); experts share one plan since
+    the bank is homogeneous.
+    """
+    interpret = pallas_interpret_default(interpret)
+    out_dtype = out_dtype or x.dtype
+    assert w_packed.ndim == 3, "expert banks are 3-D (pack axis last)"
+    assert bits in FLOAT_FORMATS, f"no float format with {bits} bits"
+    assert x.ndim == 3 and x.shape[0] == w_packed.shape[0], (
+        x.shape, w_packed.shape)
+
+    e = x.shape[0]
+    m, kdim = x.shape[1], x.shape[2]
+
+    if transpose:
+        # W logical (E, N, K) packed along K; contraction over the packed
+        # axis — K blocks cut on 32-code group boundaries.
+        assert w_packed.shape[1] == n, (w_packed.shape, n)
+        k_ceil = w_packed.shape[2] // bits * bitpack.GROUP
+        assert kdim <= k_ceil
+        bn_, n_pad = _plan_axis(n, bn, 1)
+        bk_, k_pad = _plan_axis(k_ceil, bk, bitpack.GROUP)
+        wp = _pad_to(_pad_to(w_packed, 2, k_pad // 32 * bits), 1, n_pad)
+        kernel = functools.partial(_bmm_t_kernel, bits=bits, bk=bk_)
+        w_spec = pl.BlockSpec((1, bn_, bk_ // 32 * bits),
+                              lambda e_, i, j, k: (e_, j, k))
+    else:
+        # W logical (E, K, N) packed along N; output blocks cut on group
+        # boundaries.
+        assert w_packed.shape[1] == kdim, (w_packed.shape, kdim)
+        n_ceil = w_packed.shape[2] // bits * bitpack.GROUP
+        assert n <= n_ceil
+        bn_, n_pad = _plan_axis(n_ceil, bn, bitpack.GROUP)
+        bk_, k_pad = _plan_axis(kdim, bk, 1)
+        wp = _pad_to(_pad_to(w_packed, 2, n_pad // 32 * bits), 1, k_pad)
+        kernel = functools.partial(_bmm_kernel, bits=bits, bn=bn_)
+        w_spec = pl.BlockSpec((1, bk_, bn_ // 32 * bits),
+                              lambda e_, i, j, k: (e_, k, j))
+
+    bm_, m_pad = _plan_axis(m, bm, 1)
+    x3 = _pad_to(_pad_to(x, 2, k_pad), 1, m_pad)
+    k_steps = k_pad // bk_
+    out = pl.pallas_call(
+        functools.partial(kernel, k_steps=k_steps),
+        grid=(e, m_pad // bm_, n_pad // bn_, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda e_, i, j, k: (e_, i, k)),
+            w_spec,
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn_),
+                               lambda e_, i, j, k: (e_, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, m_pad, n_pad), out_dtype),
+        scratch_shapes=_vmem_scratch(bm_, bn_),
+        interpret=interpret,
+    )(x3, wp)
+
+    return out[:, :m, :n]

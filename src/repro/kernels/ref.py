@@ -49,6 +49,48 @@ def packed_matmul_ref(x: jnp.ndarray, w_packed: jnp.ndarray, bits: int,
                       preferred_element_type=jnp.float32)
 
 
+def packed_matmul_batched_ref(x: jnp.ndarray, w_packed: jnp.ndarray,
+                              bits: int, n: int,
+                              transpose: bool = False) -> jnp.ndarray:
+    """Per-expert ``x[e] @ unpack(w[e])``: x (E, C, K) f32/bf16; w_packed
+    (E, K, n*bits/32) uint32, or (E, n, K*bits/32) when ``transpose``
+    (contraction over the packed axis) — the MoE expert-bank orientation."""
+    if transpose:
+        w = unpack_ref(w_packed, bits, x.shape[-1], jnp.float32)  # (E, N, K)
+        return jnp.einsum("eck,enk->ecn", x.astype(jnp.float32), w,
+                          preferred_element_type=jnp.float32)
+    w = unpack_ref(w_packed, bits, n, jnp.float32)                # (E, K, N)
+    return jnp.einsum("eck,ekn->ecn", x.astype(jnp.float32), w,
+                      preferred_element_type=jnp.float32)
+
+
+def packed_matmul_dw_ref(x: jnp.ndarray, g: jnp.ndarray,
+                         transpose: bool = False,
+                         batched: bool = False) -> jnp.ndarray:
+    """Weight cotangent of the fused matmul, accumulated *packed-aware*:
+    dW never reads W at all — it contracts the saved input against the
+    upstream cotangent, so no decode happens on this grad either.
+
+    Normal orientation (out = x @ W, W (K, N)): dW = xᵀ g, laid out
+    (K, N). Transpose orientation (out = x @ Wᵀ, W (N, K)): dW = gᵀ x,
+    laid out (N, K). Leading batch dims of x/g are summed; with
+    ``batched`` the leading axis is the expert axis and is kept
+    (per-expert accumulation over the capacity axis)."""
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    if batched:
+        if transpose:
+            return jnp.einsum("ecn,eck->enk", gf, xf,
+                              preferred_element_type=jnp.float32)
+        return jnp.einsum("eck,ecn->ekn", xf, gf,
+                          preferred_element_type=jnp.float32)
+    if transpose:
+        return jnp.einsum("...n,...k->nk", gf, xf,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("...k,...n->kn", xf, gf,
+                      preferred_element_type=jnp.float32)
+
+
 def kv_decode_ref(
     q: jnp.ndarray,           # (B, H, D)
     k_packed: jnp.ndarray,    # (B, S, Hkv, D*bits/32) uint32

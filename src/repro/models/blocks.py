@@ -214,12 +214,16 @@ def moe_ffn(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     # (EXPERIMENTS.md Perf, deepseek iteration)
     ein = constrain(ein, ("model", "data", None))
 
+    # expert banks dispatch through expert_linear: 3-D float PackedTensor
+    # leaves (incl. per-layer banks sliced out of a stacked (L, E, d, f)
+    # leaf by the decode scan) hit the batched fused kernel — packed words
+    # stream per expert, the decoded bank never materializes in HBM
     we = p["experts"]
-    h = jnp.einsum("ecd,edf->ecf", ein, L.unpack_maybe(we["w_in"], x.dtype))
-    g = jnp.einsum("ecd,edf->ecf", ein, L.unpack_maybe(we["w_gate"], x.dtype))
+    h = L.expert_linear(ein, we["w_in"])
+    g = L.expert_linear(ein, we["w_gate"])
     h = jax.nn.silu(g) * h
     h = constrain(h, ("model", "data", None))
-    eout = jnp.einsum("ecf,efd->ecd", h, L.unpack_maybe(we["w_out"], x.dtype))
+    eout = L.expert_linear(h, we["w_out"])
     eout = constrain(eout, ("model", "data", None))
 
     flat_out = jnp.concatenate(

@@ -14,16 +14,27 @@ Packed-weight dispatch rules (the register-file fusion, end-to-end):
     contraction the kernel computes; the tied ``unembed`` head
     (``"...d,vd->...v"``, table packed along d) takes the kernel's
     ``transpose`` orientation.
-  * The fused kernel is decode/inference-forward only: its ``custom_vjp``
-    backward falls back to the materialized unpack+einsum (training keeps
-    the old path). ``fallback=True`` forces that legacy path in the
-    forward too (escape hatch + parity reference).
+  * 3-D float ``PackedTensor`` expert banks route through
+    ``expert_linear`` onto the batched-expert kernel orientation
+    (``kernels.ops.packed_matmul_batched``) — the MoE dispatch, including
+    per-layer banks yielded by the stacked-layer ``lax.scan``.
+  * The ``custom_vjp`` backward is fused too: dx re-enters the kernel
+    with the orientation flipped (dx = g @ Wᵀ contracts over the packed
+    axis of a normal-orientation weight, and vice versa), so training
+    weight reads also stream packed words. The packed payload itself is
+    uint32 — non-differentiable — so its cotangent stays ``float0``;
+    ``st_linear`` is the straight-through training entry point that
+    carries a dense master weight and accumulates dW from residuals
+    without ever decoding W. ``fallback=True`` forces the materialized
+    unpack+einsum everywhere (escape hatch + parity reference).
   * ``embed`` with a packed table gathers *rows of packed words* and
     decodes only the gathered rows (``PackedTensor.take``) — the table
     itself never materializes; gather traffic drops by bits/32.
-  * Everything else — int-kind packed tensors, stacked >= 3-D packed
-    leaves (MoE expert banks), norms/biases — uses ``unpack_maybe``
-    (the materialized Value Extractor path).
+  * Everything else — int-kind packed tensors, >= 4-D packed leaves,
+    norms/biases — uses ``unpack_maybe`` (the materialized Value
+    Extractor path). Einsum specs the fused kernel cannot express are
+    whitespace-normalized before matching and warn once when they force
+    a packed weight onto the slow path.
 
 Sharding is annotated with ``with_sharding_constraint`` using mesh axis
 names; outside a mesh context the constraints are no-ops.
@@ -32,6 +43,7 @@ from __future__ import annotations
 
 import functools
 import re
+import warnings
 from typing import Any, Optional, Tuple
 
 import jax
@@ -42,7 +54,6 @@ from repro.core.formats import FLOAT_FORMATS
 from repro.core.tensor_store import PackedTensor, is_packed
 from repro.distributed.sharding import constrain
 from repro.kernels import ops as kops
-from repro.kernels import ref as kref
 
 
 def unpack_maybe(w, dtype=None):
@@ -64,17 +75,59 @@ def _fusable(w) -> bool:
             and len(w.logical_shape) == 2 and w.bits in FLOAT_FORMATS)
 
 
+def _fusable_batched(w) -> bool:
+    """True when a stacked expert bank can take the batched fused path."""
+    return (is_packed(w) and w.kind == "float"
+            and len(w.logical_shape) == 3 and w.bits in FLOAT_FORMATS)
+
+
+@functools.lru_cache(maxsize=None)
+def _normalize_spec(spec: str) -> str:
+    """Collapse incidental whitespace so ``"...d, df -> ...f"`` matches
+    the same contraction as ``"...d,df->...f"`` (einsum itself ignores
+    spaces, so the dispatch must too or valid specs silently take the
+    materialized slow path)."""
+    return re.sub(r"\s+", "", spec)
+
+
 @functools.lru_cache(maxsize=None)
 def _plain_matmul_spec(spec: str) -> bool:
     """True for specs of the form ``"...a,ab->...b"`` — the last-axis x
     first-axis contraction the fused kernel computes. Anything else must
     take the unpack path rather than silently computing the wrong product.
+    Specs are whitespace-normalized before matching.
     """
-    m = re.fullmatch(r"\.\.\.(\w),(\w)(\w)->\.\.\.(\w)", spec)
+    m = re.fullmatch(r"\.\.\.(\w),(\w)(\w)->\.\.\.(\w)",
+                     _normalize_spec(spec))
     # the contraction letter must differ from the output letter:
     # "...d,dd->...d" is einsum diagonal scaling, not a matmul
     return (bool(m) and m.group(1) == m.group(2)
             and m.group(3) == m.group(4) and m.group(1) != m.group(3))
+
+
+@functools.lru_cache(maxsize=None)
+def _warn_unfused_spec(spec: str) -> None:
+    """Warn once per normalized spec when a packed weight misses the
+    fused kernel because its spec is not the plain contraction — the
+    product is still correct (unpack+einsum), just materialized."""
+    warnings.warn(
+        f"einsum spec {spec!r} against a packed weight is not the plain "
+        "last-axis x first-axis contraction; taking the materialized "
+        "unpack path (weight-read savings lost for this op)",
+        stacklevel=3,
+    )
+
+
+def _fused_dx(data, bits, kdim, transpose, g):
+    """dx for both orientations, through the fused kernel itself.
+
+    Normal forward (out = x @ W, W (K, N) packed along N): dx = g @ Wᵀ
+    contracts over the *packed* axis — exactly the kernel's ``transpose``
+    orientation over the same packed buffer. Transpose forward (out =
+    x @ Wᵀ, W (N, K) packed along K): dx = g @ W contracts over W's first
+    axis with the packed axis as output — the normal orientation. Either
+    way the backward streams packed words; W never materializes."""
+    return kops.packed_matmul(g, data, bits, kdim, transpose=not transpose)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
@@ -87,20 +140,39 @@ def _fused_mm_fwd(x, data, bits, n, transpose):
 
 
 def _fused_mm_bwd(bits, n, transpose, res, g):
-    # The fused kernel is decode/inference-forward; the backward pass
-    # keeps the materialized unpack+einsum (the training path).
+    # Fused backward: dx re-enters the kernel with the orientation
+    # flipped, so the train/grad path reads bits/32 of the f32 weight
+    # bytes too. The packed payload is uint32 (non-differentiable): its
+    # cotangent is float0 — st_linear carries the dense master weight
+    # when a weight grad is needed.
     x, data = res
-    gf = g.astype(jnp.float32)
-    if transpose:
-        w = kref.unpack_ref(data, bits, x.shape[-1], jnp.float32)  # (N, K)
-        gx = jnp.einsum("...n,nk->...k", gf, w)
-    else:
-        w = kref.unpack_ref(data, bits, n, jnp.float32)            # (K, N)
-        gx = jnp.einsum("...n,kn->...k", gf, w)
+    gx = _fused_dx(data, bits, x.shape[-1], transpose, g)
     return gx.astype(x.dtype), np.zeros(data.shape, jax.dtypes.float0)
 
 
 _fused_mm.defvjp(_fused_mm_fwd, _fused_mm_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _fused_bmm(x, data, bits, n):
+    return kops.packed_matmul_batched(x, data, bits, n)
+
+
+def _fused_bmm_fwd(x, data, bits, n):
+    return _fused_bmm(x, data, bits, n), (x, data)
+
+
+def _fused_bmm_bwd(bits, n, res, g):
+    # dx[e] = g[e] @ W[e]ᵀ: the batched kernel's transpose orientation
+    # over the same packed bank — per-expert packed words stream through
+    # the backward exactly like the forward.
+    x, data = res
+    gx = kops.packed_matmul_batched(g, data, bits, x.shape[-1],
+                                    transpose=True)
+    return gx.astype(x.dtype), np.zeros(data.shape, jax.dtypes.float0)
+
+
+_fused_bmm.defvjp(_fused_bmm_fwd, _fused_bmm_bwd)
 
 
 def _packed_matmul(x: jnp.ndarray, w: PackedTensor,
@@ -117,13 +189,95 @@ def linear(x: jnp.ndarray, w, spec: str = "...d,df->...f",
 
     2-D float ``PackedTensor`` weights dispatch to the fused
     ``packed_matmul`` kernel when ``spec`` is the plain last-axis x
-    first-axis contraction it computes (every spec the model stack uses);
-    other specs and ``fallback=True`` take the unpack-then-einsum path.
+    first-axis contraction it computes (every spec the model stack uses;
+    whitespace in the spec is normalized away first); other specs warn
+    once and take the unpack-then-einsum path, as does ``fallback=True``.
     """
-    if _fusable(w) and _plain_matmul_spec(spec) and not fallback:
-        return _packed_matmul(x, w, transpose=False)
+    if _fusable(w) and not fallback:
+        if _plain_matmul_spec(spec):
+            return _packed_matmul(x, w, transpose=False)
+        _warn_unfused_spec(_normalize_spec(spec))
     w = unpack_maybe(w, x.dtype)
     return jnp.einsum(spec, x, w)
+
+
+def expert_linear(x: jnp.ndarray, w, fallback: bool = False) -> jnp.ndarray:
+    """Per-expert matmul ``out[e] = x[e] @ W[e]`` against a stacked
+    expert bank (E, K, N) — the MoE dispatch.
+
+    3-D float ``PackedTensor`` banks stream through the batched-expert
+    orientation of the fused kernel (each expert's packed words expand in
+    VMEM while its grid slice is resident; the backward's dx streams the
+    same bank transposed), so expert weights never materialize — in the
+    prefill/train einsum or inside the decode scan, where stacked
+    (L, E, K, N) leaves yield per-layer 3-D banks. Everything else
+    (plain arrays, int-kind, ``fallback=True``) unpacks and einsums.
+    """
+    if _fusable_batched(w) and not fallback:
+        e, contract, n = w.logical_shape
+        assert x.ndim == 3 and x.shape[0] == e and x.shape[-1] == contract, (
+            x.shape, w.logical_shape)
+        return _fused_bmm(x, w.data, w.bits, n).astype(x.dtype)
+    # materialized path: any leading dims before the (expert, K, N) tail
+    # broadcast-batch (e.g. a still-stacked (L, E, K, N) bank)
+    return jnp.einsum("...ck,...kn->...cn", x, unpack_maybe(w, x.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _fused_mm_st(x, data, w_master, bits, n, transpose):
+    # w_master rides along only as the differentiable handle: the forward
+    # value comes from the packed words alone.
+    del w_master
+    return kops.packed_matmul(x, data, bits, n, transpose=transpose)
+
+
+def _fused_mm_st_fwd(x, data, w_master, bits, n, transpose):
+    out = _fused_mm_st(x, data, w_master, bits, n, transpose)
+    return out, (x, data, w_master)
+
+
+def _fused_mm_st_bwd(bits, n, transpose, res, g):
+    x, data, w_master = res
+    gx = _fused_dx(data, bits, x.shape[-1], transpose, g)
+    dw = kops.packed_matmul_dw(x, g, transpose=transpose)
+    return (gx.astype(x.dtype), np.zeros(data.shape, jax.dtypes.float0),
+            dw.astype(w_master.dtype))
+
+
+_fused_mm_st.defvjp(_fused_mm_st_fwd, _fused_mm_st_bwd)
+
+
+def st_linear(x: jnp.ndarray, w, w_master: jnp.ndarray,
+              transpose: bool = False,
+              fallback: bool = False) -> jnp.ndarray:
+    """Straight-through packed training: forward streams the packed
+    weight ``w``; backward returns a real dW cotangent to ``w_master``,
+    the dense master copy the optimizer owns.
+
+    The full train step touches only bits/32 of the f32 weight bytes:
+    the forward and the dx backward both stream packed words through the
+    fused kernel, and dW is accumulated packed-aware — from the (x, g)
+    residuals alone, never decoding W (``kernels.ops.packed_matmul_dw``).
+    ``w_master`` must match ``w``'s logical shape; its value is unused in
+    the forward (the packed codes *are* the deployed weight — this is the
+    quantization-aware straight-through estimator over Table 3 formats).
+    ``fallback=True`` is the materialized escape hatch: unpack+einsum with
+    the same straight-through wiring, the parity reference for both grads.
+    """
+    assert is_packed(w) and w.kind == "float", "st_linear needs a packed w"
+    assert tuple(w_master.shape) == tuple(w.logical_shape), (
+        w_master.shape, w.logical_shape)
+    n = w.logical_shape[0] if transpose else w.logical_shape[1]
+    if not fallback:
+        return _fused_mm_st(x, w.data, w_master, w.bits, n,
+                            transpose).astype(x.dtype)
+    # materialized reference: decoded values forward, straight-through to
+    # w_master backward (w_dec carries the value, w_master the tangent)
+    w_dec = unpack_maybe(w, jnp.float32)
+    w_st = w_dec + (w_master - jax.lax.stop_gradient(w_master)).astype(
+        jnp.float32)
+    spec = "...k,nk->...n" if transpose else "...k,kn->...n"
+    return jnp.einsum(spec, x.astype(jnp.float32), w_st).astype(x.dtype)
 
 
 def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):

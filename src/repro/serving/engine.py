@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import secrets
 import time
 from typing import Any, Deque, Dict, List, Optional
 
@@ -40,12 +41,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compat import jit, prng_key
+from repro.compat import jit, prng_fold_in, prng_key
 from repro.core.compress import repack, uniform_plan
 from repro.core.occupancy import TPU_V5E, TPUChipConfig, decode_residency
 from repro.core.tensor_store import tree_bytes
 from repro.models.config import ModelConfig
 from repro.models.lm import LM
+
+
+def sample_per_slot(key: jax.Array, logits: jnp.ndarray) -> jnp.ndarray:
+    """One categorical draw per row of (slots, V) logits, each row under
+    its own slot-folded key — the one place the per-slot key derivation
+    lives, shared by the plain engine's sampler and the speculative
+    draft loop so the two streams can never drift apart."""
+    keys = jax.vmap(prng_fold_in, (None, 0))(
+        key, jnp.arange(logits.shape[0]))
+    return jax.vmap(jax.random.categorical)(keys, logits).astype(jnp.int32)
 
 
 @dataclasses.dataclass
@@ -74,6 +85,7 @@ class ServeEngine:
     max_results: int = 65536       # finished-output retention (FIFO)
     pack_weights: bool = False     # pack params at the planned width
     prefill_chunk: int = 16        # prompt tokens ingested per prefill call
+    sample_seed: Optional[int] = None  # None: fresh nonce per engine
 
     def __post_init__(self):
         self.lm = LM(self.cfg)
@@ -118,6 +130,21 @@ class ServeEngine:
         self._pending_prefill: Dict[int, List[int]] = {}
         self.ticks = 0
         self.tokens_out = 0
+        # Sampling key derivation: base = PRNGKey(tag) folded with a
+        # per-engine nonce, then per tick fold in the tick counter and per
+        # slot the slot index. Without the nonce a restarted engine
+        # replays the identical sample stream; without the tick/slot
+        # folds every slot of a tick would share one key (and a key would
+        # recur every restart). ``sample_seed`` pins the nonce for
+        # reproducible tests/replays; it is masked to fold_in's 31-bit
+        # operand range, so wide seeds (time_ns and the like) work at the
+        # cost of colliding with their masked twin.
+        self._sample_nonce = (
+            int(self.sample_seed) & 0x7FFFFFFF
+            if self.sample_seed is not None
+            else secrets.randbits(31))
+        self._sample_base = prng_fold_in(
+            prng_key(0x5A3B1E), self._sample_nonce)
 
     # -- client API -----------------------------------------------------------
     @property
@@ -231,6 +258,19 @@ class ServeEngine:
         speculative engine mirrors every chunk into its draft cache."""
         self.state = self._prefill(self.params, self.state, tokens, n_valid)
 
+    def _tick_key(self, salt: int = 0):
+        """Per-tick sampling key: engine nonce + tick counter (+ salt for
+        auxiliary streams like the speculative draft)."""
+        key = prng_fold_in(self._sample_base, self.ticks)
+        return prng_fold_in(key, salt) if salt else key
+
+    def _sample_tokens(self, logits: jnp.ndarray) -> jnp.ndarray:
+        """Sample one token per slot from (n_slots, V) logits with
+        *per-slot* keys — two slots with identical logits in the same
+        tick draw independently, and no key ever repeats across ticks or
+        engine restarts (the per-engine nonce)."""
+        return sample_per_slot(self._tick_key(), logits)
+
     def _generate(self) -> Dict[int, List[int]]:
         """One decode tick: returns the tokens committed per request id.
         The pluggable stepper — ``SpeculativeEngine`` replaces this with a
@@ -243,10 +283,7 @@ class ServeEngine:
         toks = jnp.asarray(tokens)
         logits, self.state = self._step(self.params, self.state, toks)
         nxt = (jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
-               if self.greedy else
-               jax.random.categorical(
-                   prng_key(self.ticks), logits[:, 0, :]
-               ).astype(jnp.int32))
+               if self.greedy else self._sample_tokens(logits[:, 0, :]))
         nxt = np.asarray(nxt)
         out: Dict[int, List[int]] = {}
         for req in self._active.values():

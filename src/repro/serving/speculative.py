@@ -36,11 +36,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compat import jit, prng_key
+from repro.compat import jit
 from repro.core.compress import derive_plan, repack, uniform_plan
 from repro.core.formats import ladder_snap
 from repro.core.tensor_store import tree_bytes
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import ServeEngine, sample_per_slot
 
 
 def resolve_draft_bits(cfg) -> int:
@@ -131,7 +131,9 @@ class SpeculativeEngine(ServeEngine):
                 if greedy:
                     nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
                 else:
-                    nxt = jax.random.categorical(key_i, lg).astype(jnp.int32)
+                    # per-slot keys through the shared derivation: slots
+                    # with identical logits draw independently
+                    nxt = sample_per_slot(key_i, lg)
                 return (st, nxt[:, None]), (nxt, lg)
 
             keys = jax.random.split(key, k)
@@ -156,7 +158,11 @@ class SpeculativeEngine(ServeEngine):
         len0 = np.asarray(self.state["len"]).astype(np.int64)
         dlen0 = np.asarray(self.draft_state["len"]).astype(np.int64)
 
-        key = prng_key(0x5bec0 + self.ticks)
+        # draft stream salted off the engine's sampling base: unique per
+        # (engine nonce, tick). The salt sits far above any slot index so
+        # the draft key can never coincide with a per-slot sampling key
+        # derived from the same tick key.
+        key = self._tick_key(salt=0x0D4AF7)
         drafts, dlogits, self.draft_state = self._draft_k(
             self.draft_params, self.draft_state, t0, key)
         vt = jnp.concatenate([t0, drafts], axis=1)       # (B, k+1)
@@ -227,7 +233,10 @@ class SpeculativeEngine(ServeEngine):
         up front; full vocab rows transfer lazily — one target+draft row
         per rejection and one target row per bonus token — instead of the
         whole (B, k+1, V) tensor every tick."""
-        rng = np.random.default_rng(0x5bec0 + self.ticks)
+        # host-side residual sampling: seeded from (engine nonce, tick) so
+        # acceptance draws neither repeat across restarts nor collide with
+        # the device-side draft stream
+        rng = np.random.default_rng((self._sample_nonce, self.ticks))
         pt = jax.nn.softmax(vlogits.astype(jnp.float32), axis=-1)
         pd = jax.nn.softmax(dlogits.astype(jnp.float32), axis=-1)
         idx = drafts[..., None]

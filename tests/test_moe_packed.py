@@ -1,0 +1,139 @@
+"""Packed MoE expert banks through the fused batched dispatch.
+
+The stacked (L, E, d, f) packed leaves of a MoE model must yield
+per-layer 3-D banks inside the ``lax.scan`` (``PackedTensor.
+tree_unflatten`` reconciliation) that dispatch onto the batched fused
+kernel — in ``moe_ffn`` for prefill/train and inside the decode scan —
+and the results must match the materialized (unpacked-weights) execution
+exactly on the jnp oracle backend.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import prng_key
+from repro.configs import get_config
+from repro.core.compress import repack, uniform_plan
+from repro.core.tensor_store import is_packed, pack_tensor, unpack_tree
+from repro.kernels import ops as kops
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.lm import LM
+
+
+def _moe_cfg():
+    return get_config("deepseek_moe_16b").reduced()
+
+
+def _packed_lm(cfg, bits=12):
+    lm = LM(cfg)
+    params = lm.init(prng_key(0))
+    packed = repack(params, uniform_plan(params, bits))
+    return lm, params, packed
+
+
+def test_uniform_plan_covers_stacked_expert_banks():
+    cfg = _moe_cfg()
+    lm, params, packed = _packed_lm(cfg)
+    we = packed["blocks"]["moe"]["experts"]
+    for name in ("w_in", "w_gate", "w_out"):
+        leaf = we[name]
+        assert is_packed(leaf), name
+        assert len(leaf.logical_shape) == 4          # (L, E, d_or_f, f_or_d)
+        assert leaf.logical_shape[0] == cfg.n_layers
+        assert leaf.logical_shape[1] == cfg.n_experts
+
+
+def test_moe_ffn_dispatches_packed_banks_to_batched_kernel(monkeypatch):
+    cfg = _moe_cfg()
+    lm, params, packed = _packed_lm(cfg)
+    # slice layer 0 exactly the way lax.scan does: map over the *payload*
+    # leaves and let PackedTensor.tree_unflatten reconcile leading dims,
+    # turning the stacked (L, E, d, f) banks into per-layer 3-D banks
+    layer0 = jax.tree_util.tree_map(lambda a: a[0],
+                                    packed["blocks"]["moe"])
+    calls = []
+    orig = kops.packed_matmul_batched
+
+    def spy(*args, **kwargs):
+        calls.append(True)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(kops, "packed_matmul_batched", spy)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (2, 4, cfg.d_model)).astype(np.float32))
+    got = B.moe_ffn(layer0, x, cfg)
+    assert len(calls) == 3                      # w_in, w_gate, w_out
+    ref = B.moe_ffn(unpack_tree(layer0), x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_decode_scan_fused_matches_materialized(monkeypatch):
+    """Inside the decode scan the per-layer banks sliced from the stacked
+    (L, E, d, f) leaf must hit the batched kernel and reproduce the
+    materialized execution token-for-token."""
+    cfg = _moe_cfg()
+    lm, params, packed = _packed_lm(cfg)
+    calls = []
+    orig = kops.packed_matmul_batched
+
+    def spy(*args, **kwargs):
+        calls.append(np.shape(args[1]))
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(kops, "packed_matmul_batched", spy)
+    toks = jnp.asarray([[3], [7]], jnp.int32)
+    st_p = lm.init_decode_state(2, 16)
+    st_u = lm.init_decode_state(2, 16)
+    lg_p, st_p = lm.decode_step(packed, st_p, toks)
+    assert calls, "batched kernel never dispatched inside the scan"
+    assert all(len(s) == 3 for s in calls)      # per-layer 3-D banks
+    lg_u, st_u = lm.decode_step(unpack_tree(packed), st_u, toks)
+    np.testing.assert_allclose(
+        np.asarray(lg_p, np.float32), np.asarray(lg_u, np.float32),
+        rtol=1e-5, atol=1e-5)
+    # a second step continues to agree (state carried through both paths)
+    t2 = jnp.argmax(lg_p[:, 0], -1).astype(jnp.int32)[:, None]
+    lg_p2, _ = lm.decode_step(packed, st_p, t2)
+    lg_u2, _ = lm.decode_step(unpack_tree(packed), st_u, t2)
+    np.testing.assert_allclose(
+        np.asarray(lg_p2, np.float32), np.asarray(lg_u2, np.float32),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_moe_loss_grad_flows_through_fused_backward():
+    """Training through packed expert banks: the fused backward (batched
+    transpose-orientation dx) must compose with scan/checkpoint and match
+    the loss gradient of the materialized execution."""
+    cfg = _moe_cfg()
+    lm, params, packed = _packed_lm(cfg)
+    batch = {"tokens": jnp.asarray([[1, 2, 3, 4]], jnp.int32),
+             "labels": jnp.asarray([[2, 3, 4, 5]], jnp.int32)}
+    embed = packed["embed"]
+    embed = embed.unpack() if is_packed(embed) else embed
+
+    def loss_packed(e):
+        return lm.loss({**packed, "embed": e}, batch)
+
+    unpacked = unpack_tree(packed)
+
+    def loss_mat(e):
+        return lm.loss({**unpacked, "embed": e}, batch)
+
+    g_fused = jax.grad(loss_packed)(embed)
+    g_mat = jax.grad(loss_mat)(embed)
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_mat),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_serve_engine_pack_weights_drains():
+    """End-to-end: a pack_weights MoE engine serves through the fused
+    batched path and drains."""
+    from repro.serving import ServeEngine
+    eng = ServeEngine(_moe_cfg(), max_seq_len=16, max_slots=2,
+                      pack_weights=True)
+    rids = [eng.submit([1 + i], max_new_tokens=2) for i in range(3)]
+    eng.run_until_drained()
+    assert all(len(eng.result(r)) == 2 for r in rids)

@@ -1,5 +1,9 @@
 """Fused packed-matmul path: kernel parity over awkward shapes / dtypes /
-all Table 3 widths, layer dispatch + grads, and signedness round-trips."""
+all Table 3 widths (2-D and batched-expert orientations), layer dispatch,
+the fused backward (dx/dW grad parity vs. the materialized path), spec
+normalization, and signedness round-trips."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,7 +17,7 @@ from repro.core.tensor_store import pack_tensor, pack_tree
 from repro.kernels import ops as kops
 from repro.kernels import ref as R
 from repro.kernels.kv_decode import kv_decode
-from repro.kernels.packed_matmul import packed_matmul
+from repro.kernels.packed_matmul import packed_matmul, packed_matmul_batched
 from repro.models import layers as L
 
 ALL_WIDTHS = sorted(FLOAT_FORMATS)          # 8..32, incl. the AF32 identity
@@ -93,6 +97,94 @@ def test_fused_transpose_unembed_spec(bits):
                                rtol=1e-5, atol=1e-5)
 
 
+# -- batched-expert orientation (MoE banks) -----------------------------------
+
+@pytest.mark.parametrize("bits", [8, 16, 28])
+@pytest.mark.parametrize("transpose", [False, True])
+def test_batched_parity_widths_and_orientations(bits, transpose):
+    e, c, k, n = 3, 5, 64, 96
+    rng = np.random.default_rng(bits + transpose)
+    x = jnp.asarray((rng.standard_normal((e, c, k)) * 0.5
+                     ).astype(np.float32))
+    wshape = (e, n, k) if transpose else (e, k, n)
+    w = jnp.asarray((rng.standard_normal(wshape) * 0.5).astype(np.float32))
+    wp = R.pack_ref(w, bits)
+    ref = R.packed_matmul_batched_ref(x, wp, bits, n, transpose)
+    got = packed_matmul_batched(x, wp, bits, n, transpose=transpose,
+                                bm=8, bn=32, bk=32, interpret=True)
+    assert got.shape == (e, c, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("eckn", [(2, 3, 50, 33), (5, 1, 37, 65),
+                                  (1, 7, 33, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batched_nonmultiple_shapes(eckn, dtype):
+    """Expert banks with dims that divide by nothing MXU-shaped: divisor
+    selection + zero-padding must hold per expert; bf16 upcasts in-kernel."""
+    bits = 16
+    e, c, k, n = eckn
+    rng = np.random.default_rng(sum(eckn))
+    x = jnp.asarray((rng.standard_normal((e, c, k)) * 0.5)).astype(dtype)
+    w = jnp.asarray((rng.standard_normal((e, k, n)) * 0.5
+                     ).astype(np.float32))
+    wp = R.pack_ref(w, bits)
+    ref = R.packed_matmul_batched_ref(x, wp, bits, n)
+    got = packed_matmul_batched(x, wp, bits, n, bm=8, bn=32, bk=32,
+                                interpret=True)
+    assert got.shape == (e, c, n)
+    assert got.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref), rtol=tol, atol=tol)
+
+
+def test_expert_linear_dispatches_to_batched_kernel(monkeypatch):
+    calls = []
+    orig = kops.packed_matmul_batched
+
+    def spy(*args, **kwargs):
+        calls.append(True)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(kops, "packed_matmul_batched", spy)
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((4, 6, 32)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((4, 32, 64)) * 0.2
+                     ).astype(np.float32))
+    wb = pack_tensor(w, 16)
+    got = L.expert_linear(x, wb)
+    assert calls == [True]
+    ref = L.expert_linear(x, wb, fallback=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_expert_linear_plain_and_4d_take_unpack_path(monkeypatch):
+    """Plain banks and >= 4-D packed leaves must not touch the batched
+    kernel — only per-layer 3-D float banks are fusable."""
+    def boom(*a, **k):
+        raise AssertionError("batched kernel must not be called")
+
+    monkeypatch.setattr(kops, "packed_matmul_batched", boom)
+    rng = np.random.default_rng(10)
+    x = jnp.asarray(rng.standard_normal((2, 3, 32)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((2, 32, 64)) * 0.2
+                     ).astype(np.float32))
+    out = L.expert_linear(x, w)                   # plain array
+    assert out.shape == (2, 3, 64)
+    w4 = pack_tensor(jnp.asarray(
+        (rng.standard_normal((2, 2, 32, 64)) * 0.2).astype(np.float32)), 16)
+    assert not L._fusable_batched(w4)
+    x4 = jnp.asarray(rng.standard_normal((2, 2, 3, 32)).astype(np.float32))
+    out4 = L.expert_linear(x4, w4)            # materialized, never fused
+    ref4 = jnp.einsum("...ck,...kn->...cn", x4, w4.unpack())
+    assert out4.shape == (2, 2, 3, 64)
+    np.testing.assert_allclose(np.asarray(out4), np.asarray(ref4),
+                               rtol=1e-5, atol=1e-5)
+
+
 # -- layer dispatch -----------------------------------------------------------
 
 def test_linear_dispatches_to_fused_kernel(monkeypatch):
@@ -160,6 +252,167 @@ def test_linear_grad_matches_fallback_path():
                              fallback=True).astype(jnp.float32).sum())(x)
     np.testing.assert_allclose(np.asarray(g_fused_t), np.asarray(g_ref_t),
                                rtol=1e-5, atol=1e-5)
+
+
+# -- fused backward: grad parity vs. the materialized path --------------------
+
+@pytest.mark.parametrize("bits", ALL_WIDTHS)
+def test_grad_parity_all_widths(bits):
+    """dx through the fused backward (flipped-orientation kernel) must
+    match the materialized unpack+einsum backward at every Table 3 width."""
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray(rng.standard_normal((3, 48)).astype(np.float32))
+    wt = pack_tensor(jnp.asarray(
+        (rng.standard_normal((48, 64)) * 0.2).astype(np.float32)), bits)
+    g_fused = jax.grad(lambda x_: (L.linear(x_, wt) ** 2).sum())(x)
+    g_ref = jax.grad(
+        lambda x_: (L.linear(x_, wt, fallback=True).astype(jnp.float32)
+                    ** 2).sum())(x)
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mkn", [(3, 50, 33), (7, 33, 96), (1, 37, 65)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grad_parity_awkward_shapes_and_dtypes(mkn, dtype):
+    m, k, n = mkn
+    rng = np.random.default_rng(m + k + n)
+    x = jnp.asarray((rng.standard_normal((m, k)) * 0.5)).astype(dtype)
+    wt = pack_tensor(jnp.asarray(
+        (rng.standard_normal((k, n)) * 0.2).astype(np.float32)), 16)
+    g_fused = jax.grad(
+        lambda x_: L.linear(x_, wt).astype(jnp.float32).sum())(x)
+    g_ref = jax.grad(
+        lambda x_: L.linear(x_, wt, fallback=True).astype(jnp.float32)
+        .sum())(x)
+    assert g_fused.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(g_fused, np.float32),
+                               np.asarray(g_ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bits", [8, 16, 28])
+def test_grad_parity_transpose_orientation(bits):
+    """The tied-unembed (transpose) forward backs into the kernel's
+    *normal* orientation for dx."""
+    rng = np.random.default_rng(bits + 100)
+    x = jnp.asarray(rng.standard_normal((2, 5, 40)).astype(np.float32))
+    ht = pack_tensor(jnp.asarray(
+        (rng.standard_normal((64, 40)) * 0.2).astype(np.float32)), bits)
+    g_fused = jax.grad(
+        lambda x_: (L.unembed(x_, ht, tied=True) ** 2).sum())(x)
+    g_ref = jax.grad(
+        lambda x_: (L.unembed(x_, ht, tied=True, fallback=True)
+                    .astype(jnp.float32) ** 2).sum())(x)
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_grad_parity_batched_expert_bank(bits):
+    """dx through the batched fused backward (per-expert transpose
+    orientation) vs. the materialized einsum backward."""
+    rng = np.random.default_rng(bits + 200)
+    x = jnp.asarray(rng.standard_normal((3, 4, 40)).astype(np.float32))
+    wb = pack_tensor(jnp.asarray(
+        (rng.standard_normal((3, 40, 24)) * 0.2).astype(np.float32)), bits)
+    g_fused = jax.grad(lambda x_: (L.expert_linear(x_, wb) ** 2).sum())(x)
+    g_ref = jax.grad(
+        lambda x_: (L.expert_linear(x_, wb, fallback=True)
+                    .astype(jnp.float32) ** 2).sum())(x)
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("transpose", [False, True])
+@pytest.mark.parametrize("bits", [8, 16, 24])
+def test_st_linear_dx_dw_parity(transpose, bits):
+    """Straight-through packed training: fused dx/dW vs. the materialized
+    straight-through reference must agree for both orientations. dW is
+    accumulated from residuals alone (never decodes W), so it is exact."""
+    rng = np.random.default_rng(bits + 7 * transpose)
+    k, n = 40, 56
+    x = jnp.asarray(rng.standard_normal((2, 3, k)).astype(np.float32))
+    w = jnp.asarray((rng.standard_normal((n, k) if transpose else (k, n))
+                     * 0.2).astype(np.float32))
+    wt = pack_tensor(w, bits)
+    wm = wt.unpack()                 # dense master copy
+
+    def loss(x_, wm_, fb):
+        return (L.st_linear(x_, wt, wm_, transpose=transpose,
+                            fallback=fb) ** 2).sum()
+
+    dx_f, dw_f = jax.grad(loss, argnums=(0, 1))(x, wm, False)
+    dx_r, dw_r = jax.grad(loss, argnums=(0, 1))(x, wm, True)
+    assert dw_f.shape == wm.shape
+    np.testing.assert_allclose(np.asarray(dx_f), np.asarray(dx_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dw_f), np.asarray(dw_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_packed_matmul_dw_matches_einsum():
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.standard_normal((2, 5, 16)).astype(np.float32))
+    g = jnp.asarray(rng.standard_normal((2, 5, 24)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(kops.packed_matmul_dw(x, g)),
+        np.asarray(jnp.einsum("...k,...n->kn", x, g)), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(kops.packed_matmul_dw(x, g, transpose=True)),
+        np.asarray(jnp.einsum("...n,...k->nk", g, x)), rtol=1e-5, atol=1e-5)
+    xe = jnp.asarray(rng.standard_normal((3, 4, 8)).astype(np.float32))
+    ge = jnp.asarray(rng.standard_normal((3, 4, 6)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(kops.packed_matmul_dw(xe, ge, batched=True)),
+        np.asarray(jnp.einsum("eck,ecn->ekn", xe, ge)),
+        rtol=1e-5, atol=1e-5)
+
+
+# -- spec normalization + slow-path warning -----------------------------------
+
+def test_whitespace_spec_still_fuses(monkeypatch):
+    """einsum ignores spaces, so the dispatch must too — a whitespace
+    variant of the plain contraction used to silently take the slow path."""
+    calls = []
+    orig = kops.packed_matmul
+
+    def spy(*args, **kwargs):
+        calls.append(True)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(kops, "packed_matmul", spy)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((2, 48)).astype(np.float32))
+    wt = pack_tensor(jnp.asarray(
+        (rng.standard_normal((48, 32)) * 0.2).astype(np.float32)), 16)
+    got = L.linear(x, wt, spec="...d, df -> ...f")
+    assert calls == [True]
+    ref = L.linear(x, wt, spec="...d,df->...f", fallback=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_unrecognized_spec_against_packed_weight_warns_once():
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.standard_normal((2, 32)).astype(np.float32))
+    wt = pack_tensor(jnp.asarray(
+        (rng.standard_normal((48, 32)) * 0.2).astype(np.float32)), 16)
+    spec = "...z,yz->...y"                 # valid einsum, not fusable
+    L._warn_unfused_spec.cache_clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        L.linear(x, wt, spec=spec)
+        L.linear(x, wt, spec=spec)         # second call: cached, silent
+    msgs = [w for w in rec if "materialized unpack path" in str(w.message)]
+    assert len(msgs) == 1
+    # plain (unpacked) weights never warn — nothing is lost there
+    with warnings.catch_warnings(record=True) as rec2:
+        warnings.simplefilter("always")
+        L.linear(x, jnp.ones((48, 32), jnp.float32), spec=spec)
+    assert not [w for w in rec2
+                if "materialized unpack path" in str(w.message)]
 
 
 def test_int_and_stacked_packed_fall_back(monkeypatch):

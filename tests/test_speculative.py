@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
+
 from repro.compat import prng_key
 from repro.configs import get_config
 from repro.core.compress import CompressionPlan, derive_plan, repack, \
@@ -88,6 +90,61 @@ def test_repack_tree_handles_packed_and_plain_leaves():
     assert out["norm"] is tree["norm"]
     packed_b, logical_b = tree_bytes(out)
     assert packed_b < logical_b
+
+
+def test_derive_plan_at_floor_is_distinct_but_equal():
+    """Deriving from a plan already at the AF8 floor must hand back a
+    *new* plan equal in content — never an alias of the source's mutable
+    dicts (a tuner revising one plan must not rewrite the other)."""
+    plan = CompressionPlan(float_bits={"a": 8, "b": 8},
+                           int_bits={"i": (12, False)}, tune_evals=3)
+    for delta in (0, 4, 8):
+        d = derive_plan(plan, delta)
+        assert d == plan                      # every width already floored
+        assert d is not plan
+        assert d.float_bits is not plan.float_bits
+        assert d.int_bits is not plan.int_bits
+        d.float_bits["a"] = 32                # mutating the derived plan…
+        d.int_bits["i"] = (4, True)
+        assert plan.float_bits["a"] == 8      # …never touches the source
+        assert plan.int_bits["i"] == (12, False)
+
+
+@settings(max_examples=25)
+@given(st.sampled_from((8, 12, 16, 20, 24, 28)), st.integers(0, 3))
+def test_derive_plan_distinctness_property(bits, steps):
+    """Any chain of derivations shares no mutable state with its source
+    and is idempotent once it reaches the floor."""
+    plan = CompressionPlan(float_bits={"w": bits}, int_bits={})
+    cur = plan
+    for _ in range(steps):
+        nxt = derive_plan(cur, 4)
+        assert nxt.float_bits is not cur.float_bits
+        assert nxt.float_bits["w"] <= cur.float_bits["w"]
+        cur = nxt
+    floored = derive_plan(CompressionPlan(float_bits={"w": 8}, int_bits={}),
+                          4)
+    assert floored.float_bits == {"w": 8}
+
+
+@settings(max_examples=25)
+@given(st.sampled_from((8, 12, 16, 20, 24, 28)))
+def test_repack_at_width_is_noop_property(bits):
+    """Repacking at the leaf's current width must return the identical
+    object — no decode->encode round trip, hence zero error accumulation
+    no matter how often the same plan is applied."""
+    rng = np.random.default_rng(bits)
+    leaf = pack_tensor(
+        jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32)), bits)
+    tree = {"w": leaf, "other": jnp.ones((2, 32), jnp.float32)}
+    plan = CompressionPlan(float_bits={"w": bits}, int_bits={})
+    out1 = repack(tree, plan)
+    assert out1["w"] is leaf                      # byte-identical, free
+    assert out1["other"] is tree["other"]         # unnamed: untouched
+    # and through a real round trip: width change then back is stable
+    down = repack_tensor(leaf, 8)
+    up_down = repack_tensor(repack_tensor(down, 8), 8)
+    assert up_down is down
 
 
 # -- packed embed gather (satellite: ROADMAP open item) -----------------------
