@@ -31,6 +31,7 @@ def main() -> None:
     from benchmarks.roofline import bench_roofline
     from benchmarks.serving_residency import bench_residency
     from benchmarks.speculative import bench_speculative
+    from benchmarks.train_packed import bench_train_packed
 
     benches = {
         "table1": bench_table1,
@@ -45,6 +46,7 @@ def main() -> None:
         "perf": bench_perf,
         "roofline": bench_roofline,
         "speculative": bench_speculative,
+        "train_packed": bench_train_packed,
     }
     selected = (set(args.only.split(",")) if args.only else set(benches))
 

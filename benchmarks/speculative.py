@@ -81,13 +81,18 @@ def bench_speculative() -> List[Tuple[str, float, str]]:
         w_t = spec.weight_read_bytes
         w_d = spec.draft_weight_read_bytes
         kvb = cfg.kv_bytes_per_token()
+        kvb_draft = spec.draft_kv_bytes_per_token
         # target weights stream once per verify call; draft weights once
         # per draft step (k drafts + 1 mirror append)
         target_bpt = w_t / max(commit_slot, 1e-9)
         draft_bpt = w_d * (K + 1) / max(commit_slot, 1e-9)
         base_bpt = base.weight_read_bytes          # 1 token per step
-        # KV: both caches append (k+1) rows/tick, roll back to committed
-        kv_bpt = 2 * kvb * (K + 1) / max(commit_slot, 1e-9)
+        # KV: both caches append (k+1) rows/tick and roll back to the
+        # committed length — but the draft's rows are narrower
+        # (draft_kv_bits), so the two streams are reported split
+        target_kv_bpt = kvb * (K + 1) / max(commit_slot, 1e-9)
+        draft_kv_bpt = kvb_draft * (K + 1) / max(commit_slot, 1e-9)
+        kv_bpt = target_kv_bpt + draft_kv_bpt
         base_kv_bpt = kvb
 
         tps_b = bstats["tokens"] / max(bstats["wall_s"], 1e-9)
@@ -112,8 +117,10 @@ def bench_speculative() -> List[Tuple[str, float, str]]:
                 f"{base_bpt}")
         artifact["configs"].append({
             "config": name,
-            "weight_bits": cfg.compression.weight_bits or 16,
+            "weight_bits": cfg.resolved_weight_bits,
             "draft_bits": spec.draft_bits,
+            "kv_bits": cfg.resolved_kv_bits,
+            "draft_kv_bits": spec.draft_kv_bits,
             "k": K,
             "greedy_exact": exact,
             "acceptance_rate": accept,
@@ -126,6 +133,8 @@ def bench_speculative() -> List[Tuple[str, float, str]]:
             "draft_weight_bytes_per_committed_token": draft_bpt,
             "baseline_weight_bytes_per_token": base_bpt,
             "kv_bytes_per_committed_token": kv_bpt,
+            "target_kv_bytes_per_committed_token": target_kv_bpt,
+            "draft_kv_bytes_per_committed_token": draft_kv_bpt,
             "baseline_kv_bytes_per_token": base_kv_bpt,
             "beats_baseline_bytes_per_token": beats,
             "tokens_per_s_speculative": tps_s,

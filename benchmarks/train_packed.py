@@ -1,0 +1,145 @@
+"""Packed-master training bench: weight-read bytes + loss parity + speed.
+
+For one zoo config at ``reduced()`` scale this bench runs a short
+training session twice through the real ``Trainer`` — dense masters
+(the PR-4 baseline) and packed-master mode (``pack_params=True``: every
+forward/backward streams ``PackedTensor`` codes, the optimizer updates
+dense masters, changed leaves re-encode to the plan width each step) —
+and reports:
+
+  * **train-step weight-read bytes**, packed vs. the dense f32 stream.
+    The forward streams every planned weight once and the fused dx
+    backward streams the same packed buffer a second time (dW reads no
+    weights at all — it accumulates from residuals), so per step the
+    packed read is 2 x bits/32 of the f32 stream; the bench asserts the
+    ratio (a few unplanned f32 riders — unstacked norms — add an
+    epsilon, hence the 2% slack);
+  * **loss parity** over the short run: the packed-master losses must
+    track the dense baseline within the plan width's quantization
+    tolerance (AF16 tracks to ~1e-3 relative on the reduced models;
+    asserted at the per-width tolerance below);
+  * **tokens/s** both modes under the active backend (CPU rows time the
+    jnp oracle — the bytes columns are the hardware-meaningful numbers,
+    as with BENCH_packed_path.json);
+  * a **staleness** probe: a ``repack_every=2`` run must report exactly
+    0.0 staleness on repack steps and > 0 on the stale step between.
+
+Writes ``BENCH_train_packed.json`` into the current directory for CI to
+archive, and returns the usual ``(name, us, derived)`` CSV rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Tuple
+
+ARTIFACT = "BENCH_train_packed.json"
+CONFIG = "qwen3_8b"
+STEPS = 3
+SEQ_LEN = 32
+BATCH = 2
+
+# |packed - dense| / dense loss tolerated per plan width: the ST forward
+# quantizes every weight read, so the gap scales with the format's
+# relative step (2^-mantissa_bits).
+LOSS_RTOL = {8: 0.5, 12: 0.05, 16: 0.01, 20: 0.01, 24: 0.01, 28: 0.01,
+             32: 0.01}
+
+
+def bench_train_packed() -> List[Tuple[str, float, str]]:
+    from repro.compat import prng_key
+    from repro.configs import get_config
+    from repro.core.compress import uniform_plan, repack
+    from repro.core.tensor_store import tree_bytes
+    from repro.models.lm import LM
+    from repro.train import Trainer, TrainConfig
+
+    rows: List[Tuple[str, float, str]] = []
+    full = get_config(CONFIG)
+    cfg = full.reduced()
+    wbits = cfg.resolved_weight_bits
+
+    tc = TrainConfig(steps=STEPS, seq_len=SEQ_LEN, global_batch=BATCH,
+                     lr=1e-3, log_every=1)
+    dense = Trainer(cfg, tc).run()
+    tcp = dataclasses.replace(tc, pack_params=True, repack_every=1)
+    packed = Trainer(cfg, tcp).run()
+
+    # per-step weight stream: forward + fused dx backward each read every
+    # (packed) weight once; the dense baseline reads the f32 leaves twice
+    params = LM(cfg).init(prng_key(tc.seed))
+    plan = uniform_plan(params, wbits)
+    packed_tree = repack(params, plan)
+    packed_bytes, f32_bytes = tree_bytes(packed_tree)
+    read_packed = 2 * packed_bytes
+    read_f32 = 2 * f32_bytes
+    ratio = read_packed / max(read_f32, 1)
+    # <= 2 x bits/32 of the dense f32 stream (unplanned riders add <2%)
+    budget = 2 * (wbits / 32.0) * f32_bytes
+    if read_packed > budget * 1.02:
+        raise AssertionError(
+            f"packed train step reads {read_packed} B > 2 x bits/32 "
+            f"budget {budget:.0f} B")
+
+    rel = abs(packed["final_loss"] - dense["final_loss"]) / max(
+        abs(dense["final_loss"]), 1e-9)
+    rtol = LOSS_RTOL.get(wbits, 0.05)
+    if rel > rtol:
+        raise AssertionError(
+            f"packed-master loss diverged: {packed['final_loss']:.5f} vs "
+            f"dense {dense['final_loss']:.5f} (rel {rel:.4f} > {rtol})")
+
+    # staleness probe: repack_every=2 must be exactly fresh on repack
+    # steps and stale in between
+    tcs = dataclasses.replace(tc, steps=4, pack_params=True,
+                              repack_every=2)
+    probe = Trainer(cfg, tcs).run()
+    stale = dict(probe["staleness"])            # step -> max abs drift
+    if stale[1] != 0.0 or stale[3] != 0.0:
+        raise AssertionError(f"staleness nonzero after repack: {stale}")
+    if stale[0] == 0.0 and stale[2] == 0.0:
+        raise AssertionError(
+            f"staleness zero on every off-step (probe inert): {stale}")
+
+    us_d = 1e6 * sum(dense["step_times"]) / STEPS
+    us_p = 1e6 * sum(packed["step_times"]) / STEPS
+    toks = SEQ_LEN * BATCH
+    rows.append((
+        f"train_packed.{CONFIG}.train_step", us_p,
+        f"tokens_per_s={toks / (us_p * 1e-6):.1f};"
+        f"dense={toks / (us_d * 1e-6):.1f};"
+        f"train_weight_read_bytes={read_packed};"
+        f"bytes_ratio_vs_f32={ratio:.3f};loss_rel_diff={rel:.5f}",
+    ))
+
+    artifact = {
+        "bench": "train_packed",
+        "config": CONFIG,
+        "weight_bits": wbits,
+        "steps": STEPS,
+        "seq_len": SEQ_LEN,
+        "global_batch": BATCH,
+        "losses_dense": dense["losses"],
+        "losses_packed": packed["losses"],
+        "final_loss_dense": dense["final_loss"],
+        "final_loss_packed": packed["final_loss"],
+        "loss_rel_diff": rel,
+        "loss_rtol": rtol,
+        "train_step_weight_read_bytes_packed": read_packed,
+        "train_step_weight_read_bytes_f32": read_f32,
+        "bytes_ratio_vs_f32": ratio,
+        "staleness_probe": {str(k): v for k, v in stale.items()},
+        "tokens_per_s_packed": toks / (us_p * 1e-6),
+        "tokens_per_s_dense": toks / (us_d * 1e-6),
+        "us_per_step_packed": us_p,
+        "us_per_step_dense": us_d,
+        # analytic full-scale train-step weight stream (fwd + dx bwd)
+        "full_config_train_weight_read_bytes_packed":
+            2 * full.n_active_params() * wbits // 8,
+        "full_config_train_weight_read_bytes_bf16":
+            2 * full.n_active_params() * 2,
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=2)
+    rows.append(("train_packed.artifact", 0.0, ARTIFACT))
+    return rows

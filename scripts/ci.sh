@@ -27,23 +27,29 @@ if ! $smoke_only; then
     python -m pytest -x -q \
         --deselect tests/test_distributed.py::test_dryrun_mesh_matrix
 
-    echo "== benchmark smoke (micro + perf + packed path + speculative) =="
+    echo "== benchmark smoke (micro + perf + packed path + speculative + train packed) =="
     # packed_path runs the fused kernel in Pallas interpret mode for the
     # parity rows (2-D and batched-expert orientations), benchmarks the
     # MoE expert-bank chain and one train step (forward + fused backward
     # weight stream), and (re)writes BENCH_packed_path.json as a CI
     # artifact;
     # speculative drains the same traffic through the plain and the
-    # narrow-draft engines, asserts greedy outputs identical, and writes
-    # BENCH_speculative.json (acceptance rate + bytes/committed token).
+    # narrow-draft engines (narrow draft KV included), asserts greedy
+    # outputs identical, and writes BENCH_speculative.json (acceptance
+    # rate + bytes/committed token, target/draft KV split);
+    # train_packed runs the Trainer in packed-master mode vs. the dense
+    # baseline, asserts loss parity within the plan width's tolerance,
+    # the 2 x bits/32 train-step weight stream and the repack_every
+    # staleness contract, and writes BENCH_train_packed.json.
     # Artifacts are removed first so a stale copy can't mask a bench that
     # stopped writing them. The CSV is always echoed — even when run.py
     # exits nonzero — so the rows that did succeed reach the CI log;
     # ERROR: rows or a nonzero exit fail the build.
-    rm -f BENCH_packed_path.json BENCH_speculative.json
+    rm -f BENCH_packed_path.json BENCH_speculative.json \
+        BENCH_train_packed.json
     set +e
     bench_csv=$(python -m benchmarks.run \
-        --only micro,perf,packed_path,speculative)
+        --only micro,perf,packed_path,speculative,train_packed)
     bench_rc=$?
     set -e
     printf '%s\n' "$bench_csv"
@@ -56,6 +62,8 @@ if ! $smoke_only; then
         echo "BENCH_packed_path.json artifact missing" >&2; exit 1; }
     test -f BENCH_speculative.json || {
         echo "BENCH_speculative.json artifact missing" >&2; exit 1; }
+    test -f BENCH_train_packed.json || {
+        echo "BENCH_train_packed.json artifact missing" >&2; exit 1; }
 fi
 
 echo "== 8-device distributed smoke (mesh matrix) =="

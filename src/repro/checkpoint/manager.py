@@ -63,18 +63,25 @@ class CheckpointManager:
         self._thread: Optional[threading.Thread] = None
 
     # -- public ---------------------------------------------------------------
-    def save(self, step: int, tree: Any, blocking: bool = True) -> str:
-        """Snapshot to host now; write (a)synchronously; return final path."""
+    def save(self, step: int, tree: Any, blocking: bool = True,
+             plan: Any = None) -> str:
+        """Snapshot to host now; write (a)synchronously; return final path.
+
+        ``plan`` (a ``core.compress.CompressionPlan`` or None) rides in
+        the manifest — packed-master training checkpoints persist the
+        ``(packed codes, masters, plan)`` triple, and the plan is what
+        lets a resumed run re-encode updated masters at the same widths
+        without re-tuning."""
         host_tree = compat.tree_map(
             lambda l: np.asarray(jax.device_get(l)), tree, is_leaf=is_packed
         ) if not _tree_has_packed(tree) else _device_get_packed(tree)
         final = self._step_dir(step)
         if blocking:
-            self._write(step, host_tree, final)
+            self._write(step, host_tree, final, plan)
         else:
             self.wait()
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_tree, final),
+                target=self._write, args=(step, host_tree, final, plan),
                 daemon=True,
             )
             self._thread.start()
@@ -97,8 +104,12 @@ class CheckpointManager:
                 out.append(int(m.group(1)))
         return sorted(out)
 
-    def restore(self, step: Optional[int] = None) -> Tuple[int, Any]:
-        """Load (step, tree of host numpy arrays / PackedTensors)."""
+    def restore(self, step: Optional[int] = None,
+                with_plan: bool = False) -> Tuple:
+        """Load (step, tree of host numpy arrays / PackedTensors) — or
+        (step, tree, plan) with ``with_plan``, where plan is the
+        ``CompressionPlan`` the checkpoint was saved with (None when the
+        run was not packed-master)."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.directory}")
@@ -124,13 +135,17 @@ class CheckpointManager:
             json.loads(manifest["treedef_json"]),
             is_leaf=lambda x: x is None,
         )
-        return step, compat.tree_unflatten(treedef, leaves)
+        tree = compat.tree_unflatten(treedef, leaves)
+        if with_plan:
+            return step, tree, _plan_from_jsonable(manifest.get("plan"))
+        return step, tree
 
     # -- internals --------------------------------------------------------------
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:06d}")
 
-    def _write(self, step: int, host_tree: Any, final: str) -> None:
+    def _write(self, step: int, host_tree: Any, final: str,
+               plan: Any = None) -> None:
         tmp = tempfile.mkdtemp(
             prefix=f"step_{step:06d}.tmp-", dir=self.directory
         )
@@ -156,6 +171,7 @@ class CheckpointManager:
             "step": step,
             "leaves": leaves_meta,
             "treedef_json": json.dumps(_to_jsonable(skeleton)),
+            "plan": _plan_to_jsonable(plan),
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -201,3 +217,27 @@ def _to_jsonable(tree):
     if isinstance(tree, (list, tuple)):
         return [_to_jsonable(v) for v in tree]
     return None
+
+
+def _plan_to_jsonable(plan) -> Optional[Dict[str, Any]]:
+    """CompressionPlan -> manifest entry (per-leaf widths + signedness)."""
+    if plan is None:
+        return None
+    return {
+        "float_bits": dict(plan.float_bits),
+        "int_bits": {k: [int(b), bool(s)]
+                     for k, (b, s) in plan.int_bits.items()},
+        "tune_evals": int(plan.tune_evals),
+    }
+
+
+def _plan_from_jsonable(entry):
+    if entry is None:
+        return None
+    from repro.core.compress import CompressionPlan
+    return CompressionPlan(
+        float_bits={k: int(b) for k, b in entry["float_bits"].items()},
+        int_bits={k: (int(b), bool(s))
+                  for k, (b, s) in entry["int_bits"].items()},
+        tune_evals=int(entry.get("tune_evals", 0)),
+    )

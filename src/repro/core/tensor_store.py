@@ -88,22 +88,25 @@ class PackedTensor:
         runs on the uint32 words (bits/32 of the f32 gather traffic), and
         the Value Extractor / Converter only ever sees the gathered rows
         instead of materializing the whole table (important when the table
-        is a 150k-row vocabulary and the gather wants a handful)."""
+        is a 150k-row vocabulary and the gather wants a handful).
+
+        Dispatches through ``kernels.ops.take_rows`` — the Pallas
+        gather-decode kernel for 2-D payloads on TPU (rows DMA'd by
+        scalar-prefetched index, decoded in VMEM), the jnp oracle
+        elsewhere (higher-rank payloads always take the oracle)."""
         if len(self.logical_shape) < 2:
             raise ValueError(
                 f"take() needs a leading row axis; shape {self.logical_shape}"
             )
-        rows = jnp.take(self.data, indices, axis=0)
+        from repro.kernels import ops as kops
+
         n = self.logical_shape[-1]
-        codes = bitpack.unpack_groups(rows, self.bits, n)
-        if self.kind == "float":
-            out = decode_float(codes, FLOAT_FORMATS[self.bits])
-        else:
-            out = decode_int(codes, self.bits, self.signed)
-        out = out.astype(self.out_dtype)
-        return out.reshape(
-            tuple(jnp.shape(indices)) + self.logical_shape[1:]
-        )
+        idx_shape = tuple(jnp.shape(indices))
+        flat = jnp.asarray(indices).reshape(-1)
+        out = kops.take_rows(self.data, flat, self.bits, n,
+                             kind=self.kind, signed=self.signed,
+                             out_dtype=self.out_dtype)
+        return out.reshape(idx_shape + self.logical_shape[1:])
 
     @property
     def nbytes_packed(self) -> int:
@@ -116,6 +119,56 @@ class PackedTensor:
     @property
     def compression_ratio(self) -> float:
         return 32.0 / self.bits
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class STWeight:
+    """A straight-through training weight: packed codes + dense master.
+
+    The packed-master training mode carries every planned parameter as
+    this pair — the forward always computes from ``packed`` (the deployed
+    codes, exactly what serving streams), while gradients flow to
+    ``master``, the dense copy the optimizer owns. ``models.layers``
+    dispatches it everywhere a weight can appear: the fused matmul paths
+    route through ``st_linear``-style custom_vjps (dW from residuals,
+    never decoding W) and the materialized paths (norms, fallbacks) use
+    the straight-through decode ``unpack(packed) + (master - sg(master))``.
+
+    Both children are pytree leaves, so stacked (L, ...) pairs slice
+    per-layer through ``lax.scan`` exactly like bare ``PackedTensor``
+    leaves (the payload's leading dims reconcile on unflatten)."""
+
+    packed: PackedTensor
+    master: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.packed, self.master), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def logical_shape(self) -> Tuple[int, ...]:
+        return self.packed.logical_shape
+
+
+def is_st(x) -> bool:
+    return isinstance(x, STWeight)
+
+
+def st_tree(packed_tree: Any, master_tree: Any) -> Any:
+    """Zip a (partially) packed tree with its dense masters: every
+    ``PackedTensor`` leaf pairs into an ``STWeight``; unplanned leaves
+    come from the master tree (the packed tree's dense mirror copies are
+    carried only so the two trees stay congruent). This is the parameter
+    tree the packed-master train step runs the model on — values from
+    the codes, tangents to the masters."""
+    return jax.tree_util.tree_map(
+        lambda pk, m: STWeight(pk, m) if is_packed(pk) else m,
+        packed_tree, master_tree, is_leaf=is_packed,
+    )
 
 
 # -- the Value Truncator path -------------------------------------------------

@@ -133,8 +133,7 @@ TP_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
 )
 
 
-def spec_for(path: str, shape: Tuple[int, ...], mode: str = "tp",
-             packed: bool = False) -> P:
+def spec_for(path: str, shape: Tuple[int, ...], mode: str = "tp") -> P:
     """PartitionSpec for a parameter path under the given mode."""
     axes: Optional[Tuple[Any, ...]] = None
     for pat, a in TP_RULES:
@@ -162,10 +161,57 @@ def spec_for(path: str, shape: Tuple[int, ...], mode: str = "tp",
     return drop_indivisible(resolve_axes(spec), shape)
 
 
+def _spec_shards(entry, sizes: Dict[str, int]) -> int:
+    names = entry if isinstance(entry, tuple) else (entry,)
+    shards = 1
+    for n in names:
+        shards *= sizes.get(n, 1)
+    return shards
+
+
+def spec_for_packed(path: str, logical_shape: Tuple[int, ...],
+                    mode: str = "tp",
+                    axis_sizes: Optional[Dict[str, int]] = None) -> P:
+    """PartitionSpec for a packed uint32 word array, consistent with the
+    *logical* tensor's spec.
+
+    The payload has the logical rank with the last axis rescaled to
+    group-of-32 words, so leading dims take the logical rules verbatim.
+    The packed (last) axis is the subtle one: an even word split that
+    lands mid-group would hand two devices halves of one group's
+    shift/or network — checking word divisibility alone is wrong (e.g.
+    96 codes at AF16 = 48 words split 2 ways is 24 words each but 1.5
+    groups). And a split on a group boundary is still wrong when the
+    last group carries padding (48 codes = 2 groups: a 2-way group split
+    gives device 0 logical codes 0-31 and device 1 codes 32-47 + pad,
+    misaligned with the 24/24 logical split every logical-spec consumer
+    assumes). The axis may shard only when the *logical* axis is a
+    multiple of 32 x shard-count; otherwise it drops to replicated.
+
+    ``axis_sizes`` overrides the current-mesh query for the group check
+    (unit-testable without a multi-device mesh, like
+    ``drop_indivisible``)."""
+    from repro.core import bitpack
+
+    spec = spec_for(path, logical_shape, mode)
+    rank = len(logical_shape)
+    entries = list(tuple(spec)) + [None] * (rank - len(tuple(spec)))
+    if rank and entries[-1] is not None:
+        sizes = (axis_sizes if axis_sizes is not None
+                 else current_mesh_axis_sizes())
+        shards = _spec_shards(entries[-1], sizes)
+        if shards > 1 and logical_shape[-1] % (bitpack.GROUP * shards):
+            entries[-1] = None
+    return P(*entries)
+
+
 def shard_leaf(path: str, leaf, mesh: Mesh, mode: str = "tp"):
-    """NamedSharding for one (possibly packed) parameter leaf."""
+    """NamedSharding for one (possibly packed) parameter leaf. Packed
+    leaves shard by their *logical* spec with the group-of-32 word axis
+    kept intact (``spec_for_packed``) — never by raw payload shape, which
+    can split a group across devices."""
     from repro.core.tensor_store import PackedTensor
     if isinstance(leaf, PackedTensor):
-        shape = leaf.data.shape
-        return NamedSharding(mesh, spec_for(path, shape, mode, packed=True))
+        return NamedSharding(mesh, spec_for_packed(
+            path, leaf.logical_shape, mode))
     return NamedSharding(mesh, spec_for(path, leaf.shape, mode))

@@ -67,6 +67,20 @@ def pack(x, bits: int):
     return _ref.pack_ref(x, bits)
 
 
+def take_rows(packed, indices, bits: int, n: int, kind: str = "float",
+              signed: bool = True, out_dtype=jnp.float32):
+    """Gather rows of a 2-D packed payload by index and decode only the
+    gathered rows (the packed ``embed`` path). On the Pallas backends each
+    row is DMA'd by a scalar-prefetched index and decoded in VMEM; the
+    jnp oracle is the same gather+decode in XLA."""
+    if BACKEND.use_pallas and packed.ndim == 2 and indices.ndim == 1:
+        from repro.kernels.take import take_rows as _k
+        return _k(packed, indices, bits, n, kind=kind, signed=signed,
+                  out_dtype=out_dtype, interpret=BACKEND.interpret)
+    return _ref.take_rows_ref(packed, indices, bits, n, kind, signed,
+                              out_dtype)
+
+
 def packed_matmul(x, w_packed, bits: int, n: int, transpose: bool = False):
     """Fused unpack+matmul (the models' packed-weight hot path). The
     kernel flattens leading batch dims itself; ``transpose`` selects

@@ -9,7 +9,12 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import bitpack
-from repro.core.formats import FLOAT_FORMATS, decode_float, encode_float
+from repro.core.formats import (
+    FLOAT_FORMATS,
+    decode_float,
+    decode_int,
+    encode_float,
+)
 
 
 def unpack_ref(packed: jnp.ndarray, bits: int, n: int,
@@ -17,6 +22,22 @@ def unpack_ref(packed: jnp.ndarray, bits: int, n: int,
     """Value Extractor + Converter: packed words -> floats (last axis n)."""
     codes = bitpack.unpack_groups(packed, bits, n)
     return decode_float(codes, FLOAT_FORMATS[bits]).astype(out_dtype)
+
+
+def take_rows_ref(packed: jnp.ndarray, indices: jnp.ndarray, bits: int,
+                  n: int, kind: str = "float", signed: bool = True,
+                  out_dtype=jnp.float32) -> jnp.ndarray:
+    """Gather rows of packed words, decode only the gathered rows — the
+    packed ``embed`` path. packed (R, n*bits/32) uint32, indices (B,) ->
+    (B, n). The Pallas kernel DMAs one row per scalar-prefetched index;
+    this oracle is the same gather in XLA."""
+    rows = jnp.take(packed, indices, axis=0)
+    codes = bitpack.unpack_groups(rows, bits, n)
+    if kind == "float":
+        out = decode_float(codes, FLOAT_FORMATS[bits])
+    else:
+        out = decode_int(codes, bits, signed)
+    return out.astype(out_dtype)
 
 
 def pack_ref(x: jnp.ndarray, bits: int) -> jnp.ndarray:

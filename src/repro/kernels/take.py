@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: gather packed rows by index and decode in VMEM.
+
+The packed ``embed`` path (``PackedTensor.take``): a decode tick gathers a
+handful of rows out of a 150k-row vocabulary table. The jnp oracle
+gathers the uint32 words with XLA and decodes the gathered rows; this
+kernel moves the whole read onto the scalar-prefetch DMA path —
+
+    HBM:  one (1, words) row of packed words per grid step, the row
+          index coming from a scalar-prefetched index vector
+    VMEM: static shift/or slice gather (``bitpack.unpack_groups``) +
+          Value Converter (``formats.decode_float`` / ``decode_int``)
+    HBM:  the decoded (1, n) row
+
+so gather traffic stays bits/32 of the f32 gather and the decoded table
+never materializes. Index order is arbitrary (out-of-order, duplicated
+rows are fine — each grid step DMAs its own row).
+
+``interpret=None`` resolves through ``repro.compat.pallas``: compiled on
+a real TPU, interpret (Python validation) elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.compat.pallas import pallas_interpret_default
+from repro.core import bitpack
+from repro.core.formats import FLOAT_FORMATS, decode_float, decode_int
+
+
+def _take_kernel(idx_ref, p_ref, o_ref, *, bits: int, kind: str,
+                 signed: bool, out_dtype):
+    del idx_ref                       # consumed by the index_map DMA
+    n = o_ref.shape[-1]
+    codes = bitpack.unpack_groups(p_ref[...], bits, n)
+    if kind == "float":
+        out = decode_float(codes, FLOAT_FORMATS[bits])
+    else:
+        out = decode_int(codes, bits, signed)
+    o_ref[...] = out.astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "n", "kind", "signed", "out_dtype",
+                              "interpret")
+)
+def take_rows(
+    packed: jnp.ndarray,
+    indices: jnp.ndarray,
+    bits: int,
+    n: int,
+    kind: str = "float",
+    signed: bool = True,
+    out_dtype=jnp.float32,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Gather+decode rows: packed (R, n*bits/32) uint32, indices (B,)
+    int -> (B, n) decoded values. One grid step per gathered row; the
+    row's packed words are DMA'd straight from the scalar-prefetched
+    index, so only gathered rows ever reach VMEM."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    interpret = pallas_interpret_default(interpret)
+    assert packed.ndim == 2, "flatten leading index dims before calling"
+    assert indices.ndim == 1
+    b = indices.shape[0]
+    words = packed.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, words), lambda i, idx_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_take_kernel, bits=bits, kind=kind,
+                          signed=signed, out_dtype=out_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n), out_dtype),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), packed)

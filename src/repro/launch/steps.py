@@ -30,7 +30,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import (jit, mesh_context, path_str, prng_key,
                           tree_map_with_path)
 from repro.distributed.sharding import (drop_indivisible,
-                                        resolve_axes, spec_for)
+                                        resolve_axes, shard_leaf)
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.models.lm import LM
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
@@ -48,11 +48,13 @@ class Program:
 
 
 def _tree_shardings(tree, mesh: Mesh, mode: str):
+    from repro.core.tensor_store import is_packed
+
     def leaf_spec(path, leaf):
-        return NamedSharding(
-            mesh, spec_for(path_str(path), leaf.shape, mode)
-        )
-    return tree_map_with_path(leaf_spec, tree)
+        # packed leaves shard by their logical spec with the group-of-32
+        # word axis kept intact (distributed.sharding.spec_for_packed)
+        return shard_leaf(path_str(path), leaf, mesh, mode)
+    return tree_map_with_path(leaf_spec, tree, is_leaf=is_packed)
 
 
 def _batch_shardings(specs: Dict, mesh: Mesh) -> Dict:

@@ -1,7 +1,8 @@
 """Production training launcher.
 
     python -m repro.launch.train --arch qwen3_8b --steps 1000 \
-        --checkpoint-dir /ckpt/qwen3 [--mode zero] [--multi-pod]
+        --checkpoint-dir /ckpt/qwen3 [--mode zero] [--multi-pod] \
+        [--pack-params [--repack-every N]]
 
 On a real pod this process runs per host (jax.distributed.initialize is
 called when JAX_COORDINATOR is set); here it also drives single-host
@@ -28,6 +29,13 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true",
                     help="smoke-scale config for single-host runs")
     ap.add_argument("--grad-compress-bits", type=int, default=None)
+    ap.add_argument("--pack-params", action="store_true",
+                    help="packed-master training: params live as "
+                         "PackedTensor codes at the planned width; the "
+                         "optimizer owns dense masters")
+    ap.add_argument("--repack-every", type=int, default=1,
+                    help="re-encode changed masters to codes every N "
+                         "steps (packed-master mode)")
     args = ap.parse_args()
 
     if os.environ.get("JAX_COORDINATOR"):
@@ -51,6 +59,8 @@ def main() -> None:
         checkpoint_every=max(args.steps // 10, 1),
         grad_compress_bits=args.grad_compress_bits
         or cfg.compression.grad_bits,
+        pack_params=args.pack_params,
+        repack_every=args.repack_every,
     )
 
     if args.reduced:

@@ -38,6 +38,12 @@ class CompressionConfig:
     # verifies, so this knob trades acceptance rate for draft bytes/token
     # without ever changing emitted tokens.
     draft_weight_bits: Optional[int] = None
+    # width the draft's *KV cache* packs at. None = one Table 3 ladder
+    # step below ``kv_bits`` when the target packs its KV, else mirror
+    # the target. Narrower draft KV shrinks the draft's bytes/token the
+    # same way narrower draft weights do — and like them it only moves
+    # the acceptance rate, never the emitted tokens.
+    draft_kv_bits: Optional[int] = None
 
     @property
     def any_packing(self) -> bool:
@@ -123,6 +129,23 @@ class ModelConfig:
     def compute_dtype(self):
         return jnp.dtype(self.dtype)
 
+    @property
+    def resolved_kv_bits(self) -> int:
+        """Bits per KV element for *bytes accounting*: the packed width
+        when the KV cache packs, else 16 (the bf16 compute dtype). The
+        single source of the ``or 16`` default — the residency planner
+        and ``kv_bytes_per_token`` both read it, so a future default
+        change cannot skew one side of the bytes accounting. (State
+        *allocation* still keys off ``compression.kv_bits`` directly:
+        None there means a dense cache, not a 16-bit packed one.)"""
+        return self.compression.kv_bits or 16
+
+    @property
+    def resolved_weight_bits(self) -> int:
+        """Bits per weight element for bytes accounting and for packing
+        at the planned width: the configured width, else 16 (bf16)."""
+        return self.compression.weight_bits or 16
+
     def n_params(self) -> int:
         """Analytical parameter count (embedding + blocks + head)."""
         d, f, v = self.d_model, self.d_ff, self.vocab_size
@@ -183,7 +206,7 @@ class ModelConfig:
 
     def kv_bytes_per_token(self, bits: Optional[int] = None) -> int:
         """KV-cache (or state) bytes per token at the given packing."""
-        b = bits or self.compression.kv_bits or 16
+        b = bits or self.resolved_kv_bits
         hd = self.resolved_head_dim
         if self.family == "ssm":
             return 0                # state is O(1) in sequence length

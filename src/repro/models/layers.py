@@ -51,18 +51,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import FLOAT_FORMATS
-from repro.core.tensor_store import PackedTensor, is_packed
+from repro.core.tensor_store import PackedTensor, STWeight, is_packed, is_st
 from repro.distributed.sharding import constrain
 from repro.kernels import ops as kops
 
 
+def _st_decode(w: STWeight) -> jnp.ndarray:
+    """Materialized straight-through decode: the value comes from the
+    packed codes, the tangent flows to the dense master. The zero-valued
+    ``master - stop_gradient(master)`` term is how every non-fused path
+    (norms, odd einsum specs, ``fallback=True``) stays trainable in
+    packed-master mode without touching the forward numerics."""
+    dec = w.packed.unpack()
+    return dec + (w.master - jax.lax.stop_gradient(w.master)).astype(
+        dec.dtype)
+
+
 def unpack_maybe(w, dtype=None):
-    """PackedTensor -> array (Value Extractor path); arrays pass through.
+    """PackedTensor -> array (Value Extractor path); ``STWeight`` ->
+    straight-through decode (codes forward, master tangent); arrays pass
+    through.
 
     This is the *materialized* decode — the fallback/grad path. Matmul
     forwards against 2-D float packed weights should go through
     ``linear``/``unembed`` so they hit the fused kernel instead.
     """
+    if is_st(w):
+        x = _st_decode(w)
+        return x.astype(dtype) if dtype is not None else x
     if is_packed(w):
         x = w.unpack()
         return x.astype(dtype) if dtype is not None else x
@@ -192,13 +208,48 @@ def linear(x: jnp.ndarray, w, spec: str = "...d,df->...f",
     first-axis contraction it computes (every spec the model stack uses;
     whitespace in the spec is normalized away first); other specs warn
     once and take the unpack-then-einsum path, as does ``fallback=True``.
+    ``STWeight`` pairs take the same dispatch with the straight-through
+    backward: the fused path is ``st_linear`` (dW to the master from
+    residuals alone), the materialized path the ST decode.
     """
-    if _fusable(w) and not fallback:
+    if is_st(w) and not fallback:
+        if _fusable(w.packed):
+            if _plain_matmul_spec(spec):
+                return st_linear(x, w.packed, w.master)
+            _warn_unfused_spec(_normalize_spec(spec))
+    elif _fusable(w) and not fallback:
         if _plain_matmul_spec(spec):
             return _packed_matmul(x, w, transpose=False)
         _warn_unfused_spec(_normalize_spec(spec))
     w = unpack_maybe(w, x.dtype)
     return jnp.einsum(spec, x, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _fused_bmm_st(x, data, w_master, bits, n):
+    # straight-through batched matmul: the master bank rides along as the
+    # differentiable handle; the forward value comes from the packed words
+    del w_master
+    return kops.packed_matmul_batched(x, data, bits, n)
+
+
+def _fused_bmm_st_fwd(x, data, w_master, bits, n):
+    out = _fused_bmm_st(x, data, w_master, bits, n)
+    return out, (x, data, w_master)
+
+
+def _fused_bmm_st_bwd(bits, n, res, g):
+    # dx[e] = g[e] @ W[e]ᵀ streams the packed bank transposed; dW[e]
+    # accumulates per expert from the (x, g) residuals without reading W.
+    x, data, w_master = res
+    gx = kops.packed_matmul_batched(g, data, bits, x.shape[-1],
+                                    transpose=True)
+    dw = kops.packed_matmul_dw(x, g, batched=True)
+    return (gx.astype(x.dtype), np.zeros(data.shape, jax.dtypes.float0),
+            dw.astype(w_master.dtype))
+
+
+_fused_bmm_st.defvjp(_fused_bmm_st_fwd, _fused_bmm_st_bwd)
 
 
 def expert_linear(x: jnp.ndarray, w, fallback: bool = False) -> jnp.ndarray:
@@ -210,16 +261,28 @@ def expert_linear(x: jnp.ndarray, w, fallback: bool = False) -> jnp.ndarray:
     VMEM while its grid slice is resident; the backward's dx streams the
     same bank transposed), so expert weights never materialize — in the
     prefill/train einsum or inside the decode scan, where stacked
-    (L, E, K, N) leaves yield per-layer 3-D banks. Everything else
+    (L, E, K, N) leaves yield per-layer 3-D banks. ``STWeight`` banks
+    take the same kernel with the straight-through backward: dW[e] flows
+    to the dense master bank from residuals alone. Everything else
     (plain arrays, int-kind, ``fallback=True``) unpacks and einsums.
     """
+    if is_st(w) and not fallback and _fusable_batched(w.packed):
+        pk = w.packed
+        e, contract, n = pk.logical_shape
+        assert x.ndim == 3 and x.shape[0] == e and x.shape[-1] == contract, (
+            x.shape, pk.logical_shape)
+        assert tuple(w.master.shape) == tuple(pk.logical_shape), (
+            w.master.shape, pk.logical_shape)
+        return _fused_bmm_st(x, pk.data, w.master, pk.bits, n).astype(
+            x.dtype)
     if _fusable_batched(w) and not fallback:
         e, contract, n = w.logical_shape
         assert x.ndim == 3 and x.shape[0] == e and x.shape[-1] == contract, (
             x.shape, w.logical_shape)
         return _fused_bmm(x, w.data, w.bits, n).astype(x.dtype)
     # materialized path: any leading dims before the (expert, K, N) tail
-    # broadcast-batch (e.g. a still-stacked (L, E, K, N) bank)
+    # broadcast-batch (e.g. a still-stacked (L, E, K, N) bank); STWeight
+    # leaves decode straight-through (codes forward, master tangent)
     return jnp.einsum("...ck,...kn->...cn", x, unpack_maybe(w, x.dtype))
 
 
@@ -334,7 +397,15 @@ def embed(tokens: jnp.ndarray, table) -> jnp.ndarray:
     A packed table dispatches to ``PackedTensor.take``: gather the packed
     *words* for the requested rows, decode only those — the (V, D) table
     never materializes (a decode tick gathers B rows of a 150k-row vocab).
+    An ``STWeight`` table takes the same packed gather forward with a
+    straight-through master gather riding along at zero value, so the
+    embedding grad scatters into the gathered rows of the dense master
+    (the table itself still never materializes).
     """
+    if is_st(table) and len(table.logical_shape) == 2:
+        rows = table.packed.take(tokens)
+        m = jnp.take(table.master, tokens, axis=0)
+        return rows + (m - jax.lax.stop_gradient(m)).astype(rows.dtype)
     if is_packed(table) and len(table.logical_shape) == 2:
         return table.take(tokens)
     t = unpack_maybe(table)
@@ -346,7 +417,13 @@ def unembed(x: jnp.ndarray, table_or_head, tied: bool,
     """Vocabulary projection. A packed tied table (V, D) is packed along
     d — the fused kernel's ``transpose`` orientation contracts over the
     packed axis directly; an untied head (D, V) takes the normal
-    orientation. ``fallback=True`` forces unpack-then-einsum."""
+    orientation. ``STWeight`` heads take the matching ``st_linear``
+    orientation (dW to the master head/table from residuals).
+    ``fallback=True`` forces unpack-then-einsum."""
+    if is_st(table_or_head) and not fallback \
+            and _fusable(table_or_head.packed):
+        return st_linear(x, table_or_head.packed, table_or_head.master,
+                         transpose=tied)
     if _fusable(table_or_head) and not fallback:
         return _packed_matmul(x, table_or_head, transpose=tied)
     w = unpack_maybe(table_or_head, x.dtype)

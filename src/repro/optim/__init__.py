@@ -3,4 +3,6 @@ from repro.optim.adamw import (  # noqa: F401
     adamw_init,
     adamw_update,
     cosine_schedule,
+    packed_staleness,
+    repack_params,
 )

@@ -25,6 +25,7 @@ from repro import compat
 
 from repro.core import bitpack
 from repro.core.formats import FLOAT_FORMATS, decode_float, encode_float
+from repro.core.tensor_store import is_packed, pack_tensor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,3 +142,45 @@ def adamw_update(
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])
     return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# Packed-master training: the codes <-> masters re-encode step
+# ---------------------------------------------------------------------------
+
+def repack_params(packed, masters):
+    """Re-encode every planned leaf of ``packed`` from its dense master
+    at the leaf's existing width (Value Truncator path, all jnp — jits
+    inside the train step). Unplanned leaves mirror the master straight
+    through, keeping the two trees congruent. This is the deploy step of
+    packed-master training: the codes the next forward streams are the
+    freshly truncated masters."""
+    def _one(pk, m):
+        if is_packed(pk):
+            return pack_tensor(m, pk.bits, kind=pk.kind, signed=pk.signed,
+                               out_dtype=pk.out_dtype)
+        return m
+
+    return compat.tree_map(_one, packed, masters, is_leaf=is_packed)
+
+
+def packed_staleness(packed, masters):
+    """Max |decode(stored codes) - decode(encode(master))| over planned
+    leaves: how far the deployed codes have drifted from what a fresh
+    re-encode of the masters would store. Exactly 0.0 right after a
+    repack step; grows between repacks when ``repack_every > 1`` (the
+    knob trades re-encode cost against training on stale codes)."""
+    out = jnp.float32(0.0)
+    flat_p = compat.tree_leaves(packed, is_leaf=is_packed)
+    flat_m = compat.tree_leaves(masters)
+    for pk, m in zip(flat_p, flat_m):
+        if not is_packed(pk) or pk.kind != "float":
+            continue
+        fmt = FLOAT_FORMATS[pk.bits]
+        fresh = decode_float(
+            encode_float(jnp.asarray(m, jnp.float32), fmt), fmt
+        ).astype(pk.out_dtype)
+        cur = pk.unpack()
+        out = jnp.maximum(out, jnp.max(jnp.abs(
+            cur.astype(jnp.float32) - fresh.astype(jnp.float32))))
+    return out

@@ -2,4 +2,5 @@ from repro.serving.engine import ServeEngine, Request  # noqa: F401
 from repro.serving.speculative import (  # noqa: F401
     SpeculativeEngine,
     resolve_draft_bits,
+    resolve_draft_kv_bits,
 )

@@ -92,15 +92,18 @@ class ServeEngine:
         self.params = self.lm.init(prng_key(0))
         self.weight_plan = None
         if self.pack_weights:
-            wbits = self.cfg.compression.weight_bits or 16
-            self.weight_plan = uniform_plan(self.params, wbits)
+            self.weight_plan = uniform_plan(
+                self.params, self.cfg.resolved_weight_bits)
             self.params = repack(self.params, self.weight_plan)
-        kv_bits = self.cfg.compression.kv_bits or 16
+        # both the residency planner and kv_bytes_per_token read the same
+        # resolved width, so the bytes accounting cannot skew if the
+        # default ever moves
         weight_bytes = self.cfg.n_params() * (
-            (self.cfg.compression.weight_bits or 16) // 8)
+            self.cfg.resolved_weight_bits // 8)
         plan = decode_residency(
             weight_bytes=weight_bytes,
-            kv_bytes_per_token=self.cfg.kv_bytes_per_token(kv_bits),
+            kv_bytes_per_token=self.cfg.kv_bytes_per_token(
+                self.cfg.resolved_kv_bits),
             seq_len=self.max_seq_len,
             chip=self.chip,
         )

@@ -40,6 +40,7 @@ from repro.compat import jit
 from repro.core.compress import derive_plan, repack, uniform_plan
 from repro.core.formats import ladder_snap
 from repro.core.tensor_store import tree_bytes
+from repro.models.lm import LM
 from repro.serving.engine import ServeEngine, sample_per_slot
 
 
@@ -49,7 +50,22 @@ def resolve_draft_bits(cfg) -> int:
     comp = cfg.compression
     if comp.draft_weight_bits:
         return comp.draft_weight_bits
-    return ladder_snap(comp.weight_bits or 16, below=True)
+    return ladder_snap(cfg.resolved_weight_bits, below=True)
+
+
+def resolve_draft_kv_bits(cfg) -> Optional[int]:
+    """Draft KV width: the ``draft_kv_bits`` knob, else one Table 3
+    ladder rung below the target's ``kv_bits`` when the target packs its
+    KV cache; a dense-KV target keeps a dense draft cache (None). Like
+    the draft weight width, this only moves the acceptance rate — the
+    full-width target verifies every token, so emitted tokens never
+    change."""
+    comp = cfg.compression
+    if comp.draft_kv_bits:
+        return ladder_snap(comp.draft_kv_bits)
+    if comp.kv_bits:
+        return ladder_snap(comp.kv_bits, below=True)
+    return None
 
 
 @dataclasses.dataclass
@@ -68,6 +84,7 @@ class SpeculativeEngine(ServeEngine):
 
     k: int = 4                          # drafted tokens per tick
     draft_bits: Optional[int] = None    # override the config knob
+    draft_kv_bits: Optional[int] = None  # override the draft-KV knob
 
     def __post_init__(self):
         super().__post_init__()
@@ -78,7 +95,7 @@ class SpeculativeEngine(ServeEngine):
                 f"family {self.cfg.family!r} cannot roll its decode state "
                 "back; speculation needs KV-length rollback"
             )
-        wbits = self.cfg.compression.weight_bits or 16
+        wbits = self.cfg.resolved_weight_bits
         dbits = self.draft_bits or resolve_draft_bits(self.cfg)
         # snap to the ladder *before* validating or reporting: the packed
         # store only has Table 3 rungs, and stats must state the width
@@ -96,12 +113,35 @@ class SpeculativeEngine(ServeEngine):
         base_plan = self.weight_plan or uniform_plan(self.params, wbits)
         self.draft_plan = derive_plan(base_plan, wbits - dbits)
         self.draft_params = repack(self.params, self.draft_plan)
-        self.draft_state = self.lm.init_decode_state(self.n_slots,
-                                                     self.max_seq_len)
+        # The draft's KV stream narrows too: its decode state packs at
+        # draft_kv_bits (knob, else one ladder rung below the target's
+        # kv_bits), through a draft LM whose config pins that width. The
+        # two caches still append/roll back in lockstep — only the bytes
+        # per appended row differ.
+        if self.draft_kv_bits is None:
+            self.draft_kv_bits = resolve_draft_kv_bits(self.cfg)
+        elif self.draft_kv_bits:
+            self.draft_kv_bits = ladder_snap(self.draft_kv_bits)
+        tgt_kv = self.cfg.compression.kv_bits
+        if self.draft_kv_bits and tgt_kv and self.draft_kv_bits > tgt_kv:
+            # a wider draft cache inverts the whole point and would make
+            # the reported draft/target KV split lie about which stream
+            # is the narrow one (equal = explicit mirror, allowed)
+            raise ValueError(
+                f"draft KV width {self.draft_kv_bits} (ladder-snapped) "
+                f"must not be wider than the target's {tgt_kv}"
+            )
+        self.draft_cfg = dataclasses.replace(
+            self.cfg, compression=dataclasses.replace(
+                self.cfg.compression, kv_bits=self.draft_kv_bits))
+        self.draft_lm = LM(self.draft_cfg)
+        self.draft_state = self.draft_lm.init_decode_state(
+            self.n_slots, self.max_seq_len)
         if self.cfg.family == "encdec":
             self.draft_state["clen"] = jnp.full(
                 (self.n_slots,), self.cfg.encoder_seq, jnp.int32)
-        self._draft_prefill = jit(self.lm.prefill_step, donate_argnums=(1,))
+        self._draft_prefill = jit(self.draft_lm.prefill_step,
+                                  donate_argnums=(1,))
         self._verify = jit(self.lm.verify_step, donate_argnums=(1,))
         self._draft_k = jit(self._make_draft_fn(), donate_argnums=(1,))
         # engine-level acceptance stats. slot_ticks counts participating
@@ -118,7 +158,7 @@ class SpeculativeEngine(ServeEngine):
 
     # -- draft ---------------------------------------------------------------
     def _make_draft_fn(self):
-        lm, k, greedy = self.lm, self.k, self.greedy
+        lm, k, greedy = self.draft_lm, self.k, self.greedy
 
         def draft_fn(params, state, t0, key):
             """t0 (B, 1) -> (drafts (B, k), draft logits (B, k, V), state
@@ -196,7 +236,7 @@ class SpeculativeEngine(ServeEngine):
         # back to where they started, so their dead rows never accumulate
         self.state = self.lm.rollback_decode_state(
             self.state, len0 + commits)
-        self.draft_state = self.lm.rollback_decode_state(
+        self.draft_state = self.draft_lm.rollback_decode_state(
             self.draft_state, dlen0 + commits)
         self._last_tokens = jnp.asarray(last)
         self.spec_ticks += 1
@@ -299,11 +339,19 @@ class SpeculativeEngine(ServeEngine):
     def draft_weight_read_bytes(self) -> int:
         return tree_bytes(self.draft_params)[0]
 
+    @property
+    def draft_kv_bytes_per_token(self) -> int:
+        """Bytes one appended draft-KV row costs per token, at the
+        draft's (narrower) packed width."""
+        return self.draft_cfg.kv_bytes_per_token(
+            self.draft_cfg.resolved_kv_bits)
+
     def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
         stats = super().run_until_drained(max_ticks)
         stats.update(
             k=self.k,
             draft_bits=self.draft_bits,
+            draft_kv_bits=self.draft_kv_bits,
             acceptance_rate=self.acceptance_rate,
             committed_per_tick=self.committed_per_tick,
             committed_per_slot_tick=self.committed_per_slot_tick,

@@ -5,6 +5,18 @@ loop that owns fault tolerance: periodic async checkpoints, preemption
 checkpointing, straggler observation, and restart-exact data (the
 pipeline is keyed by step). Gradient accumulation runs as a scan over
 microbatches inside the jit so remat + accumulation fuse.
+
+**Packed-master mode** (``TrainConfig.pack_params``): float parameters
+live as ``PackedTensor`` codes for every forward/backward — the loss runs
+the model on an ``STWeight`` tree (codes forward, straight-through dW to
+the dense masters the optimizer owns), so a train step's weight-read
+bytes are 2 x bits/32 of the f32 stream (forward + fused dx backward,
+the paper's saving now covering the whole training stack). After the
+AdamW update the changed masters re-encode to their plan width every
+``repack_every`` steps (``optim.repack_params``); between repacks the
+codes go stale by at most the masters' drift (``optim.packed_staleness``
+measures it, logged to metrics). Checkpoints persist the
+``(packed codes, masters, plan)`` triple and resume is bitwise-exact.
 """
 from __future__ import annotations
 
@@ -18,6 +30,8 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.compat import jit, prng_key, tree_map
+from repro.core.compress import uniform_plan, repack
+from repro.core.tensor_store import is_packed, st_tree
 from repro.data import SyntheticTokens
 from repro.distributed.grad_compress import (
     apply_error_feedback,
@@ -25,7 +39,14 @@ from repro.distributed.grad_compress import (
 )
 from repro.models.config import ModelConfig
 from repro.models.lm import LM
-from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    packed_staleness,
+    repack_params,
+)
 from repro.train.watchdog import PreemptionGuard, StragglerWatchdog
 
 
@@ -42,35 +63,60 @@ class TrainConfig:
     log_every: int = 10
     grad_compress_bits: Optional[int] = None   # error-feedback width
     seed: int = 0
+    # packed-master training: params live as PackedTensor codes for every
+    # forward/backward; dense masters belong to the optimizer and
+    # re-encode to the plan width every repack_every steps.
+    pack_params: bool = False
+    repack_every: int = 1
+
+
+def _grad_loop(loss_fn, diff_arg, batch, tc: TrainConfig):
+    """(loss, grads) w.r.t. ``diff_arg``, scanning microbatches when
+    configured so remat + accumulation fuse inside the jit."""
+    if tc.microbatches > 1:
+        def micro(acc, mb):
+            l, g = jax.value_and_grad(loss_fn)(diff_arg, mb)
+            return (
+                acc[0] + l / tc.microbatches,
+                tree_map(
+                    lambda a, b: a + b / tc.microbatches, acc[1], g),
+            ), None
+        zero = tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), diff_arg)
+        mbs = tree_map(
+            lambda x: x.reshape((tc.microbatches,
+                                 x.shape[0] // tc.microbatches)
+                                + x.shape[1:]),
+            batch)
+        (loss, grads), _ = jax.lax.scan(micro, (jnp.float32(0), zero),
+                                        mbs)
+        return loss, grads
+    return jax.value_and_grad(loss_fn)(diff_arg, batch)
 
 
 def make_train_step(lm: LM, opt_cfg: AdamWConfig, tc: TrainConfig):
-    """Returns train_step(params, opt_state, ef, batch, step) -> ..."""
+    """Dense mode: train_step(params, opt_state, ef, batch, step).
+
+    Packed-master mode (``tc.pack_params``): train_step(packed,
+    masters, opt_state, ef, batch, step) -> (packed, masters, opt_state,
+    ef, loss). The loss runs the model on the packed codes via the
+    ``STWeight`` straight-through tree; AdamW updates the dense masters;
+    every ``tc.repack_every``-th step the planned leaves re-encode from
+    the updated masters (``lax.cond`` — off-steps carry the stale codes
+    through untouched)."""
+
+    if tc.pack_params and tc.repack_every < 1:
+        # a traced `% 0` inside the lax.cond predicate is undefined under
+        # jit (no ZeroDivisionError) — reject it where the message helps
+        raise ValueError(
+            f"repack_every must be >= 1, got {tc.repack_every}; use a "
+            "value >= total steps to effectively never repack")
 
     def loss_fn(params, batch):
         return lm.loss(params, batch)
 
     def train_step(params, opt_state, ef_state, batch, step):
-        if tc.microbatches > 1:
-            def micro(acc, mb):
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
-                return (
-                    acc[0] + l / tc.microbatches,
-                    tree_map(
-                        lambda a, b: a + b / tc.microbatches, acc[1], g),
-                ), None
-            zero = tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            mbs = tree_map(
-                lambda x: x.reshape((tc.microbatches,
-                                     x.shape[0] // tc.microbatches)
-                                    + x.shape[1:]),
-                batch)
-            (loss, grads), _ = jax.lax.scan(micro, (jnp.float32(0), zero),
-                                            mbs)
-        else:
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-
+        loss, grads = _grad_loop(loss_fn, params, batch, tc)
         # Error-feedback gradient compression (wire format handled by the
         # DP layer; here we quantize + carry the residual).
         grads, ef_state = apply_error_feedback(
@@ -81,7 +127,27 @@ def make_train_step(lm: LM, opt_cfg: AdamWConfig, tc: TrainConfig):
                                          lr)
         return params, opt_state, ef_state, loss
 
-    return train_step
+    def packed_train_step(packed, masters, opt_state, ef_state, batch,
+                          step):
+        def st_loss(ms, mb):
+            return lm.loss(st_tree(packed, ms), mb)
+
+        loss, grads = _grad_loop(st_loss, masters, batch, tc)
+        grads, ef_state = apply_error_feedback(
+            grads, ef_state, tc.grad_compress_bits
+        )
+        lr = cosine_schedule(step, tc.lr, tc.warmup, tc.steps)
+        masters, opt_state = adamw_update(grads, opt_state, masters,
+                                          opt_cfg, lr)
+        packed = jax.lax.cond(
+            (step + 1) % tc.repack_every == 0,
+            lambda ms: repack_params(packed, ms),
+            lambda ms: packed,
+            masters,
+        )
+        return packed, masters, opt_state, ef_state, loss
+
+    return packed_train_step if tc.pack_params else train_step
 
 
 @dataclasses.dataclass
@@ -105,7 +171,9 @@ class Trainer:
         self.watchdog = StragglerWatchdog()
         self.ckpt = (CheckpointManager(self.tc.checkpoint_dir)
                      if self.tc.checkpoint_dir else None)
-        self.metrics: Dict[str, Any] = {"losses": [], "step_times": []}
+        self.plan = None               # packed-master CompressionPlan
+        self.metrics: Dict[str, Any] = {"losses": [], "step_times": [],
+                                        "staleness": []}
 
     def _extra_inputs(self, b: int):
         extra = {}
@@ -118,50 +186,91 @@ class Trainer:
                 (b, self.cfg.encoder_seq, self.cfg.d_model), jnp.float32)
         return extra
 
+    def _build_packed(self, params):
+        """(packed, masters) for packed-master mode: the plan covers every
+        float matmul leaf at the config's resolved width; the packed tree
+        mirrors the param structure (planned leaves as codes, the few
+        unplanned riders copied dense so the two donated trees never
+        alias a buffer); the masters are the dense params themselves."""
+        self.plan = self.plan or uniform_plan(
+            params, self.cfg.resolved_weight_bits)
+        packed = repack(params, self.plan)
+        packed = tree_map(
+            lambda l: l if is_packed(l) else jnp.array(l, copy=True),
+            packed, is_leaf=is_packed)
+        return packed, params
+
     def run(self, resume: bool = True,
             install_signals: bool = False) -> Dict[str, Any]:
         rng = prng_key(self.tc.seed)
         params = self.lm.init(rng)
+        packed = None
         opt_state = adamw_init(params, self.opt_cfg)
         ef = (init_error_feedback(params)
               if self.tc.grad_compress_bits else 0)
         start_step = 0
 
         if resume and self.ckpt and self.ckpt.latest_step() is not None:
-            step, tree = self.ckpt.restore()
-            params = tree_map(jnp.asarray, tree["params"])
-            opt_state = tree_map(jnp.asarray, tree["opt"])
+            if self.tc.pack_params:
+                step, tree, plan = self.ckpt.restore(with_plan=True)
+                packed = _device_put_tree(tree["packed"])
+                params = tree_map(jnp.asarray, tree["masters"])
+                self.plan = plan or uniform_plan(
+                    params, self.cfg.resolved_weight_bits)
+            else:
+                step, tree = self.ckpt.restore()
+                params = tree_map(jnp.asarray, tree["params"])
+            opt_state = _device_put_tree(tree["opt"])
             self.data.load_state_dict(tree["data"])
             start_step = step + 1
+        elif self.tc.pack_params:
+            # fresh packed-master start: encode the initial params once
+            # (a resumed run restores the codes instead — no re-encode)
+            packed, params = self._build_packed(params)
 
         step_fn = jit(
             make_train_step(self.lm, self.opt_cfg, self.tc),
-            donate_argnums=(0, 1, 2),
+            donate_argnums=(0, 1, 2, 3) if self.tc.pack_params
+            else (0, 1, 2),
         )
+        staleness_fn = (jit(packed_staleness)
+                        if self.tc.pack_params else None)
         guard = PreemptionGuard(install=install_signals)
 
         for step in range(start_step, self.tc.steps):
             t0 = time.perf_counter()
             batch = self.data.batch_at(step)
             feed = batch.as_dict(self._extra_inputs(batch.tokens.shape[0]))
-            params, opt_state, ef, loss = step_fn(
-                params, opt_state, ef, feed, jnp.int32(step))
+            if self.tc.pack_params:
+                packed, params, opt_state, ef, loss = step_fn(
+                    packed, params, opt_state, ef, feed, jnp.int32(step))
+            else:
+                params, opt_state, ef, loss = step_fn(
+                    params, opt_state, ef, feed, jnp.int32(step))
             loss = float(loss)
             dt = time.perf_counter() - t0
             self.watchdog.observe(step, dt)
             self.metrics["losses"].append(loss)
             self.metrics["step_times"].append(dt)
+            last = step + 1 == self.tc.steps
+            if staleness_fn is not None and (
+                    (step + 1) % self.tc.log_every == 0 or last):
+                self.metrics["staleness"].append(
+                    (step, float(staleness_fn(packed, params))))
             if self.ckpt and (
                 (step + 1) % self.tc.checkpoint_every == 0
                 or guard.requested
-                or step + 1 == self.tc.steps
+                or last
             ):
                 self.data.step = step + 1
-                self.ckpt.save(step, {
-                    "params": params,
-                    "opt": opt_state,
-                    "data": self.data.state_dict(),
-                }, blocking=False)
+                if self.tc.pack_params:
+                    tree = {"packed": packed, "masters": params,
+                            "opt": opt_state,
+                            "data": self.data.state_dict()}
+                else:
+                    tree = {"params": params, "opt": opt_state,
+                            "data": self.data.state_dict()}
+                self.ckpt.save(step, tree, blocking=False, plan=self.plan)
             if guard.requested:
                 break
         if self.ckpt:
@@ -171,3 +280,13 @@ class Trainer:
         self.metrics["straggler_events"] = self.watchdog.events
         self.metrics["last_step"] = step if self.metrics["losses"] else -1
         return self.metrics
+
+
+def _device_put_tree(tree):
+    """Host checkpoint tree -> device arrays; packed payloads keep their
+    PackedTensor wrapper (uint32 payload re-materialized on device)."""
+    def _one(l):
+        if is_packed(l):
+            return dataclasses.replace(l, data=jnp.asarray(l.data))
+        return jnp.asarray(l)
+    return tree_map(_one, tree, is_leaf=is_packed)

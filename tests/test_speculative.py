@@ -356,6 +356,83 @@ def test_resolve_draft_bits_knob_and_ladder_default():
         dataclasses.replace(cfg, compression=comp8)) == FLOAT_LADDER[0]
 
 
+def test_resolve_draft_kv_bits_knob_and_ladder_default():
+    from repro.serving import resolve_draft_kv_bits
+    cfg = _tiny_cfg()                                  # kv_bits=16
+    assert resolve_draft_kv_bits(cfg) == 12            # one rung below
+    comp = dataclasses.replace(cfg.compression, draft_kv_bits=8)
+    assert resolve_draft_kv_bits(
+        dataclasses.replace(cfg, compression=comp)) == 8   # knob wins
+    dense = dataclasses.replace(cfg.compression, kv_bits=None)
+    assert resolve_draft_kv_bits(
+        dataclasses.replace(cfg, compression=dense)) is None  # mirror
+
+
+def test_draft_kv_cache_is_narrower_and_greedy_exact():
+    """The draft's KV rows pack at draft_kv_bits (fewer uint32 words per
+    row than the target's), and greedy outputs stay token-for-token
+    identical to the plain engine — quality moved into the acceptance
+    rate, not the output."""
+    cfg = _tiny_cfg()
+    base = ServeEngine(cfg, max_seq_len=64, max_slots=2)
+    rb = [base.submit([1, 2, 3], max_new_tokens=5) for _ in range(3)]
+    base.run_until_drained()
+    spec = SpeculativeEngine(cfg, max_seq_len=64, max_slots=2, k=2)
+    assert spec.draft_kv_bits == 12
+    tgt_words = spec.state["kv"]["k"].shape[-1]
+    drf_words = spec.draft_state["kv"]["k"].shape[-1]
+    assert drf_words < tgt_words                     # 12/32 vs 16/32
+    assert spec.draft_kv_bytes_per_token < cfg.kv_bytes_per_token()
+    rs = [spec.submit([1, 2, 3], max_new_tokens=5) for _ in range(3)]
+    spec.run_until_drained()
+    assert all(base.result(a) == spec.result(b) for a, b in zip(rb, rs))
+    stats_kv = spec.run_until_drained()
+    assert stats_kv["draft_kv_bits"] == 12
+
+
+def test_draft_kv_bits_override_and_mirror():
+    cfg = _tiny_cfg()
+    spec8 = SpeculativeEngine(cfg, max_seq_len=64, max_slots=2, k=2,
+                              draft_kv_bits=8)
+    assert spec8.draft_kv_bits == 8
+    dense = dataclasses.replace(
+        cfg, compression=dataclasses.replace(cfg.compression,
+                                             kv_bits=None))
+    mirror = SpeculativeEngine(dense, max_seq_len=64, max_slots=2, k=2)
+    assert mirror.draft_kv_bits is None
+    assert (mirror.draft_state["kv"]["k"].dtype
+            == mirror.state["kv"]["k"].dtype)
+
+
+def test_draft_kv_bits_rejects_wider_than_target():
+    cfg = _tiny_cfg()                                  # kv_bits=16
+    comp8 = dataclasses.replace(cfg.compression, kv_bits=8)
+    with pytest.raises(ValueError, match="must not be wider"):
+        SpeculativeEngine(
+            dataclasses.replace(cfg, compression=comp8),
+            max_seq_len=64, max_slots=2, k=2, draft_kv_bits=16)
+    # equal = explicit mirror, allowed
+    eq = SpeculativeEngine(cfg, max_seq_len=64, max_slots=2, k=2,
+                           draft_kv_bits=16)
+    assert eq.draft_kv_bits == 16
+
+
+def test_kv_bits_accounting_single_accessor():
+    """ServeEngine's residency maths and ModelConfig.kv_bytes_per_token
+    resolve the packed width through one accessor, so a default change
+    cannot skew the bytes accounting between them."""
+    cfg = _tiny_cfg()
+    assert cfg.resolved_kv_bits == (cfg.compression.kv_bits or 16)
+    dense = dataclasses.replace(
+        cfg, compression=dataclasses.replace(cfg.compression,
+                                             kv_bits=None))
+    assert dense.resolved_kv_bits == 16
+    # kv_bytes_per_token() with no argument == with the resolved width
+    assert cfg.kv_bytes_per_token() == cfg.kv_bytes_per_token(
+        cfg.resolved_kv_bits)
+    assert dense.kv_bytes_per_token() == dense.kv_bytes_per_token(16)
+
+
 def test_per_request_acceptance_stats():
     cfg = _tiny_cfg()
     spec = SpeculativeEngine(cfg, max_seq_len=64, max_slots=2, k=2)
