@@ -1,0 +1,152 @@
+"""Calibration bench: tuned mixed-width plans + the adaptive draft
+controller, as deployment numbers.
+
+Part 1 — **calibrated plan vs uniform** on >= 2 zoo configs at
+``reduced()`` scale: run ``core.calibrate.calibrate`` (float widths from
+the quality-gated precision-tuning search, integer stream widths from
+the seeded range analysis) and report mean float bits, footprint ratio
+vs. the config's ``uniform_plan`` width, and the achieved quality metric
+next to the gate. The bench *asserts* the acceptance criterion: tuned
+mean float bits strictly below the uniform width while the quality
+metric stays inside the ``QualitySpec`` threshold.
+
+Part 2 — **adaptive draft controller**: drain the same request mix
+through ``SpeculativeEngine(adaptive=True)`` per config and report
+acceptance before (first decision window, the static rung's operating
+point) and after the controller's retunes. BENCH_speculative.json shows
+stablelm's static AF8 draft at ~0.15 acceptance; the bench asserts the
+controller lifts its post-retune acceptance to >= 0.5 within the run.
+
+Writes ``BENCH_calibration.json`` for CI to archive and returns the
+usual ``(name, us, derived)`` CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+ARTIFACT = "BENCH_calibration.json"
+CONFIGS = ("qwen3_8b", "stablelm_12b")
+QUALITY_KIND = "loss_delta"
+QUALITY_THRESHOLD = 0.05          # nats over the calibration batches
+N_BATCHES = 2
+BATCH_SIZE = 2
+SEQ_LEN = 16
+K = 3
+N_REQUESTS = 8
+MAX_NEW = 8
+SLOTS = 4
+MIN_PROPOSALS = 36                # decision window (3 full-slot ticks)
+ACCEPT_TARGET = 0.5               # stablelm's post-retune floor
+
+
+def _request_mix(cfg, rng) -> List[List[int]]:
+    return [list(rng.integers(1, cfg.vocab_size, int(n)))
+            for n in rng.integers(0, 24, N_REQUESTS)]
+
+
+def bench_calibration() -> List[Tuple[str, float, str]]:
+    from repro.configs import get_config
+    from repro.core.calibrate import calibrate
+    from repro.core.quality import QualitySpec
+    from repro.serving import DraftController, SpeculativeEngine
+
+    rows: List[Tuple[str, float, str]] = []
+    artifact = {
+        "bench": "calibration",
+        "quality": {"kind": QUALITY_KIND, "threshold": QUALITY_THRESHOLD},
+        "calibration": [],
+        "adaptive": [],
+    }
+    quality = QualitySpec(QUALITY_KIND, QUALITY_THRESHOLD)
+
+    # -- part 1: calibrated mixed-width plans vs uniform --------------------
+    for name in CONFIGS:
+        cfg = get_config(name).reduced()
+        t0 = time.perf_counter()
+        res = calibrate(cfg, quality, n_batches=N_BATCHES,
+                        batch_size=BATCH_SIZE, seq_len=SEQ_LEN, seed=0)
+        dt = time.perf_counter() - t0
+        if not res.accepted:
+            raise AssertionError(
+                f"{name}: tuned plan missed the quality gate "
+                f"({QUALITY_KIND}={res.metric:.4g} vs "
+                f"{QUALITY_THRESHOLD})")
+        if not res.beats_uniform:
+            raise AssertionError(
+                f"{name}: tuned mean float bits {res.mean_float_bits:.1f}"
+                f" did not beat the uniform width {res.uniform_bits}")
+        rows.append((
+            f"calibration.{name}", dt * 1e6,
+            f"mean_float_bits={res.mean_float_bits:.1f};"
+            f"uniform_bits={res.uniform_bits};"
+            f"footprint_ratio={res.footprint_ratio:.3f};"
+            f"uniform_ratio={res.uniform_ratio:.3f};"
+            f"{QUALITY_KIND}={res.metric:.4g};"
+            f"gate={QUALITY_THRESHOLD};"
+            f"tune_evals={res.tune_evals};"
+            f"beats_uniform={int(res.beats_uniform)}",
+        ))
+        artifact["calibration"].append(res.summary())
+
+    # -- part 2: the adaptive draft controller ------------------------------
+    for name in CONFIGS:
+        cfg = get_config(name).reduced()
+        rng = np.random.default_rng(7)
+        prompts = _request_mix(cfg, rng)
+        eng = SpeculativeEngine(
+            cfg, max_seq_len=128, max_slots=SLOTS, k=K,
+            pack_weights=True, adaptive=True, sample_seed=0,
+            controller=DraftController(min_proposals=MIN_PROPOSALS))
+        bits0, k0 = eng.draft_bits, eng.k
+        for p in prompts:
+            eng.submit(p, max_new_tokens=MAX_NEW)
+        t0 = time.perf_counter()
+        stats = eng.run_until_drained()
+        dt = time.perf_counter() - t0
+
+        events = stats["retune_events"]
+        # the static rung's operating point: acceptance accrued up to the
+        # first retune (the whole run, when the controller never moved)
+        if events:
+            first = events[0]
+            before = first["accepted"] / max(first["proposed"], 1)
+        else:
+            before = stats["acceptance_rate"]
+        after = stats["post_retune_acceptance"]
+
+        rows.append((
+            f"calibration.adaptive.{name}", dt * 1e6,
+            f"draft_bits={bits0}->{stats['draft_bits']};"
+            f"k={k0}->{stats['k']};retunes={stats['retunes']};"
+            f"acceptance_before={before:.3f};"
+            f"acceptance_after={after:.3f}",
+        ))
+        artifact["adaptive"].append({
+            "config": name,
+            "weight_bits": cfg.resolved_weight_bits,
+            "draft_bits_initial": bits0,
+            "draft_bits_final": stats["draft_bits"],
+            "k_initial": k0,
+            "k_final": stats["k"],
+            "retunes": stats["retunes"],
+            "retune_events": events,
+            "acceptance_before": before,
+            "acceptance_after": after,
+            "acceptance_lifetime": stats["acceptance_rate"],
+            "ticks": stats["ticks"],
+            "tokens": stats["tokens"],
+        })
+        if name == "stablelm_12b" and after < ACCEPT_TARGET:
+            raise AssertionError(
+                f"{name}: adaptive controller left acceptance at "
+                f"{after:.3f} (< {ACCEPT_TARGET}); before={before:.3f}, "
+                f"events={events}")
+
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=2)
+    rows.append(("calibration.artifact", 0.0, ARTIFACT))
+    return rows

@@ -17,6 +17,7 @@ def main() -> None:
                     help="comma-separated bench name filter")
     args = ap.parse_args()
 
+    from benchmarks.calibration import bench_calibration
     from benchmarks.micro import bench_micro
     from benchmarks.packed_path import bench_packed_path
     from benchmarks.paper_suite import (
@@ -47,6 +48,7 @@ def main() -> None:
         "roofline": bench_roofline,
         "speculative": bench_speculative,
         "train_packed": bench_train_packed,
+        "calibration": bench_calibration,
     }
     selected = (set(args.only.split(",")) if args.only else set(benches))
 

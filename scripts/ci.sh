@@ -27,7 +27,7 @@ if ! $smoke_only; then
     python -m pytest -x -q \
         --deselect tests/test_distributed.py::test_dryrun_mesh_matrix
 
-    echo "== benchmark smoke (micro + perf + packed path + speculative + train packed) =="
+    echo "== benchmark smoke (micro + perf + packed path + speculative + train packed + calibration) =="
     # packed_path runs the fused kernel in Pallas interpret mode for the
     # parity rows (2-D and batched-expert orientations), benchmarks the
     # MoE expert-bank chain and one train step (forward + fused backward
@@ -40,16 +40,21 @@ if ! $smoke_only; then
     # train_packed runs the Trainer in packed-master mode vs. the dense
     # baseline, asserts loss parity within the plan width's tolerance,
     # the 2 x bits/32 train-step weight stream and the repack_every
-    # staleness contract, and writes BENCH_train_packed.json.
+    # staleness contract, and writes BENCH_train_packed.json;
+    # calibration runs the static-analysis calibration pass on two zoo
+    # configs (asserting the tuned mixed-width plan beats uniform at the
+    # same quality gate) plus the adaptive draft controller (asserting
+    # stablelm's acceptance recovers to >= 0.5), and writes
+    # BENCH_calibration.json.
     # Artifacts are removed first so a stale copy can't mask a bench that
     # stopped writing them. The CSV is always echoed — even when run.py
     # exits nonzero — so the rows that did succeed reach the CI log;
     # ERROR: rows or a nonzero exit fail the build.
     rm -f BENCH_packed_path.json BENCH_speculative.json \
-        BENCH_train_packed.json
+        BENCH_train_packed.json BENCH_calibration.json
     set +e
     bench_csv=$(python -m benchmarks.run \
-        --only micro,perf,packed_path,speculative,train_packed)
+        --only micro,perf,packed_path,speculative,train_packed,calibration)
     bench_rc=$?
     set -e
     printf '%s\n' "$bench_csv"
@@ -64,6 +69,8 @@ if ! $smoke_only; then
         echo "BENCH_speculative.json artifact missing" >&2; exit 1; }
     test -f BENCH_train_packed.json || {
         echo "BENCH_train_packed.json artifact missing" >&2; exit 1; }
+    test -f BENCH_calibration.json || {
+        echo "BENCH_calibration.json artifact missing" >&2; exit 1; }
 fi
 
 echo "== 8-device distributed smoke (mesh matrix) =="

@@ -220,24 +220,17 @@ def _to_jsonable(tree):
 
 
 def _plan_to_jsonable(plan) -> Optional[Dict[str, Any]]:
-    """CompressionPlan -> manifest entry (per-leaf widths + signedness)."""
+    """CompressionPlan -> manifest entry: the shared plan-file codec
+    (``CompressionPlan.to_jsonable``), so a manifest plan and a
+    ``--save-plan`` file are the same schema."""
     if plan is None:
         return None
-    return {
-        "float_bits": dict(plan.float_bits),
-        "int_bits": {k: [int(b), bool(s)]
-                     for k, (b, s) in plan.int_bits.items()},
-        "tune_evals": int(plan.tune_evals),
-    }
+    return plan.to_jsonable()
 
 
 def _plan_from_jsonable(entry):
     if entry is None:
         return None
     from repro.core.compress import CompressionPlan
-    return CompressionPlan(
-        float_bits={k: int(b) for k, b in entry["float_bits"].items()},
-        int_bits={k: (int(b), bool(s))
-                  for k, (b, s) in entry["int_bits"].items()},
-        tune_evals=int(entry.get("tune_evals", 0)),
-    )
+    # from_jsonable tolerates the pre-codec manifests (no "version" key)
+    return CompressionPlan.from_jsonable(entry)

@@ -217,6 +217,64 @@ class CompressionPlan:
             den += n * 32
         return num / max(den, 1.0)
 
+    def mean_float_bits(
+        self, sizes: Optional[Dict[str, int]] = None
+    ) -> float:
+        """Mean width over the float leaves — size-weighted when per-leaf
+        element counts are supplied (the honest footprint number: one
+        large embedding at AF8 should dominate a dozen tiny heads at
+        AF24), plain mean otherwise. 32.0 for an empty plan."""
+        if not self.float_bits:
+            return 32.0
+        if sizes:
+            num = sum(b * sizes.get(k, 1)
+                      for k, b in self.float_bits.items())
+            den = sum(sizes.get(k, 1) for k in self.float_bits)
+            return num / max(den, 1)
+        return sum(self.float_bits.values()) / len(self.float_bits)
+
+    # -- JSON codec (plan files + checkpoint manifests) ------------------
+
+    def to_jsonable(self) -> Dict[str, Any]:
+        """Schema v1: ``{"version", "float_bits": {path: bits},
+        "int_bits": {path: [bits, signed]}, "tune_evals"}``. Keys are
+        stable ``path_str`` strings, sorted so the file diffs cleanly."""
+        return {
+            "version": 1,
+            "float_bits": {k: int(v) for k, v in
+                           sorted(self.float_bits.items())},
+            "int_bits": {k: [int(b), bool(s)] for k, (b, s) in
+                         sorted(self.int_bits.items())},
+            "tune_evals": int(self.tune_evals),
+        }
+
+    @classmethod
+    def from_jsonable(cls, obj: Dict[str, Any]) -> "CompressionPlan":
+        """Inverse of ``to_jsonable``; tolerates a missing ``version``
+        (pre-codec checkpoint manifests carried the same shape bare)."""
+        version = obj.get("version", 1)
+        if version != 1:
+            raise ValueError(f"unknown CompressionPlan schema v{version}")
+        return cls(
+            float_bits={k: int(v) for k, v in
+                        obj.get("float_bits", {}).items()},
+            int_bits={k: (int(v[0]), bool(v[1])) for k, v in
+                      obj.get("int_bits", {}).items()},
+            tune_evals=int(obj.get("tune_evals", 0)),
+        )
+
+    def save(self, path: str) -> None:
+        import json
+        with open(path, "w") as f:
+            json.dump(self.to_jsonable(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "CompressionPlan":
+        import json
+        with open(path) as f:
+            return cls.from_jsonable(json.load(f))
+
 
 def path_str(path: Tuple[Any, ...]) -> str:
     parts = []

@@ -1,12 +1,17 @@
 """Output-quality metrics (Section 5.3).
 
-Three metric families drive the precision-tuning loop:
+Metric families driving the precision-tuning loop:
   * **SSIM** (graphics kernels, Group 1) — structural similarity on images,
     implemented per Wang et al. 2004 with the standard 11x11 Gaussian
     window, K1=0.01, K2=0.03.
   * **%-deviation** (Group 2) — mean relative deviation from the reference
     output, in percent.
   * **binary** (Group 3, e.g. Hybridsort) — exact/incorrect.
+  * **loss-delta** (the LM calibration gate, ``core.calibrate``) — max
+    absolute difference between the reference and quantized model losses
+    over the calibration batches, in nats. The tensor-granularity
+    deployment analogue of the paper's "domain expert supplies the
+    quality metric".
 
 Thresholds follow Section 6.1: *perfect* = SSIM 1.0 / 0% deviation /
 exact; *high* = SSIM 0.9 / 10% deviation / exact.
@@ -72,12 +77,19 @@ def binary_correct(ref: jnp.ndarray, out: jnp.ndarray) -> bool:
     return bool(jnp.array_equal(jnp.asarray(ref), jnp.asarray(out)))
 
 
+def loss_delta(ref, out) -> float:
+    """Max |out - ref| over (batched) scalar losses, in nats."""
+    r = jnp.asarray(ref, jnp.float32)
+    o = jnp.asarray(out, jnp.float32)
+    return float(jnp.max(jnp.abs(o - r)))
+
+
 @dataclasses.dataclass(frozen=True)
 class QualitySpec:
     """A metric + acceptance predicate, as supplied by the domain expert."""
 
-    kind: str                       # "ssim" | "deviation" | "binary"
-    threshold: float                # SSIM lower bound / max %dev / ignored
+    kind: str                # "ssim" | "deviation" | "binary" | "loss_delta"
+    threshold: float         # SSIM lower bound / max %dev / max nats / n.a.
 
     def accepts(self, ref, out) -> bool:
         if self.kind == "ssim":
@@ -89,8 +101,24 @@ class QualitySpec:
             if self.threshold <= 0.0:       # perfect: no deviation at all
                 return dev == 0.0
             return dev <= self.threshold * (1 + 1e-6)
+        if self.kind == "loss_delta":
+            return loss_delta(ref, out) <= self.threshold + 1e-9
         if self.kind == "binary":
             return binary_correct(ref, out)
+        raise ValueError(f"unknown quality metric {self.kind!r}")
+
+    def metric(self, ref, out) -> float:
+        """The raw value the acceptance threshold gates — for reporting a
+        tuned plan's achieved quality next to the threshold (the bench /
+        calibration artifacts), without re-deriving per-kind math."""
+        if self.kind == "ssim":
+            return float(ssim(ref, out))
+        if self.kind == "deviation":
+            return float(percent_deviation(ref, out))
+        if self.kind == "loss_delta":
+            return loss_delta(ref, out)
+        if self.kind == "binary":
+            return 0.0 if binary_correct(ref, out) else 1.0
         raise ValueError(f"unknown quality metric {self.kind!r}")
 
 

@@ -77,6 +77,31 @@ class Interval:
         return f"[{self.lo}, {self.hi}]"
 
 
+def input_specs(cfg, max_seq_len: int) -> Dict[str, "Interval"]:
+    """Integer input intervals *derived from a ModelConfig* — the
+    kernel-launch knowledge the paper seeds its analysis with (tid bounds
+    etc.), for the LM deployment: token/label ids are bounded by the
+    vocabulary, positions and sequence lengths by ``max_seq_len``, expert
+    ids by the expert count. ``cfg`` is duck-typed (any object with
+    ``vocab_size`` / ``n_experts``), so this stays usable from traced
+    kernels and the calibration pass alike without import cycles.
+
+    These intervals seed ``analyze(..., input_ranges=...)`` so integer
+    widths in a ``CompressionPlan`` are analysis outputs, not hand-written
+    dicts."""
+    if max_seq_len < 1:
+        raise ValueError(f"max_seq_len must be >= 1, got {max_seq_len}")
+    specs = {
+        "tokens": Interval(0, cfg.vocab_size - 1),
+        "labels": Interval(0, cfg.vocab_size - 1),
+        "positions": Interval(0, max_seq_len - 1),
+        "len": Interval(0, max_seq_len),
+    }
+    if getattr(cfg, "n_experts", 0):
+        specs["expert_ids"] = Interval(0, cfg.n_experts - 1)
+    return specs
+
+
 def _mul_bound(a: float, b: float) -> float:
     if a == 0 or b == 0:
         return 0.0

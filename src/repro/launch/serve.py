@@ -2,7 +2,9 @@
 
     python -m repro.launch.serve --arch qwen3_8b --requests 64 \
         [--kv-bits 8] [--max-seq-len 2048] [--reduced] \
-        [--speculative 4] [--draft-bits 12] [--pack-weights]
+        [--speculative 4] [--draft-bits 12] [--adaptive] \
+        [--pack-weights] [--plan plan.json | --calibrate] \
+        [--save-plan plan.json]
 
 Sizes the slot count from the residency planner (the Table 1 occupancy
 calculator for chips), runs continuous batching until the request queue
@@ -10,7 +12,13 @@ drains, and reports occupancy + throughput. ``--speculative k`` swaps in
 the narrow-draft self-speculative stepper: a draft repacked one ladder
 step down proposes k tokens per tick, the full-width model verifies them
 in one call — emitted tokens are unchanged, ticks drop by the acceptance
-rate.
+rate; ``--adaptive`` lets the DraftController retune (draft width, k)
+from live acceptance. ``--plan plan.json`` packs weights at a calibrated
+per-leaf mixed-width plan; ``--calibrate`` runs the calibration pass
+(``core.calibrate``) in-process first, gated by ``--quality-kind`` /
+``--quality-threshold``, and ``--save-plan`` writes the plan JSON for
+later ``--plan`` runs (and for ``repro.tuning.calibrate``, the offline
+driver).
 """
 from __future__ import annotations
 
@@ -37,9 +45,27 @@ def main() -> None:
                          "one Table 3 step below weight_bits)")
     ap.add_argument("--pack-weights", action="store_true",
                     help="pack target weights at the planned width")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="speculative only: retune (draft width, k) from "
+                         "live acceptance (DraftController)")
+    ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
+                    help="pack weights at this calibrated per-leaf plan")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the calibration pass first and serve the "
+                         "tuned mixed-width plan")
+    ap.add_argument("--save-plan", default=None, metavar="OUT_JSON",
+                    help="write the served plan (from --plan/--calibrate) "
+                         "to this file")
+    ap.add_argument("--quality-kind", default="loss_delta",
+                    choices=["loss_delta", "deviation"],
+                    help="--calibrate acceptance metric")
+    ap.add_argument("--quality-threshold", type=float, default=0.05,
+                    help="--calibrate acceptance threshold (nats / %%)")
+    ap.add_argument("--calib-batches", type=int, default=2)
     args = ap.parse_args()
 
     from repro.configs import get_config
+    from repro.core.compress import CompressionPlan
     from repro.serving import ServeEngine, SpeculativeEngine
 
     cfg = get_config(args.arch)
@@ -50,15 +76,40 @@ def main() -> None:
             cfg, compression=dataclasses.replace(
                 cfg.compression, kv_bits=args.kv_bits))
 
+    plan = None
+    if args.plan and args.calibrate:
+        raise SystemExit("--plan and --calibrate are exclusive")
+    if args.plan:
+        plan = CompressionPlan.load(args.plan)
+        print(f"loaded plan {args.plan}: {len(plan.float_bits)} float "
+              f"leaves, {len(plan.int_bits)} int streams")
+    elif args.calibrate:
+        from repro.core.calibrate import calibrate
+        from repro.core.quality import QualitySpec
+        res = calibrate(
+            cfg, QualitySpec(args.quality_kind, args.quality_threshold),
+            n_batches=args.calib_batches, max_seq_len=args.max_seq_len)
+        plan = res.plan
+        print(f"calibrated {cfg.name}: mean float bits "
+              f"{res.mean_float_bits:.1f} (uniform {res.uniform_bits}), "
+              f"{args.quality_kind}={res.metric:.4g} "
+              f"(gate {args.quality_threshold})")
+    if args.save_plan:
+        if plan is None:
+            raise SystemExit("--save-plan needs --plan or --calibrate")
+        plan.save(args.save_plan)
+        print(f"wrote plan to {args.save_plan}")
+
     if args.speculative:
         eng = SpeculativeEngine(
             cfg, max_seq_len=args.max_seq_len,
             max_slots=args.slots or 4, k=args.speculative,
-            draft_bits=args.draft_bits, pack_weights=args.pack_weights)
+            draft_bits=args.draft_bits, pack_weights=args.pack_weights,
+            plan=plan, adaptive=args.adaptive)
     else:
         eng = ServeEngine(cfg, max_seq_len=args.max_seq_len,
                           max_slots=args.slots or 4,
-                          pack_weights=args.pack_weights)
+                          pack_weights=args.pack_weights, plan=plan)
     rng = np.random.default_rng(0)
     rids = [
         eng.submit(list(rng.integers(1, cfg.vocab_size, 4)),
@@ -78,6 +129,10 @@ def main() -> None:
               f"committed/tick={stats['committed_per_tick']:.2f} "
               f"draft_weight_bytes={eng.draft_weight_read_bytes} "
               f"target_weight_bytes={eng.weight_read_bytes}")
+        if args.adaptive:
+            print(f"adaptive: retunes={stats['retunes']} "
+                  f"post_retune_acceptance="
+                  f"{stats['post_retune_acceptance']:.3f}")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 
     python -m repro.launch.train --arch qwen3_8b --steps 1000 \
         --checkpoint-dir /ckpt/qwen3 [--mode zero] [--multi-pod] \
-        [--pack-params [--repack-every N]]
+        [--pack-params [--repack-every N] [--plan plan.json]]
 
 On a real pod this process runs per host (jax.distributed.initialize is
 called when JAX_COORDINATOR is set); here it also drives single-host
@@ -36,6 +36,11 @@ def main() -> None:
     ap.add_argument("--repack-every", type=int, default=1,
                     help="re-encode changed masters to codes every N "
                          "steps (packed-master mode)")
+    ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
+                    help="packed-master plan source: a calibrated "
+                         "per-leaf plan JSON (core.calibrate / "
+                         "repro.tuning.calibrate) instead of the uniform "
+                         "config width")
     args = ap.parse_args()
 
     if os.environ.get("JAX_COORDINATOR"):
@@ -61,6 +66,7 @@ def main() -> None:
         or cfg.compression.grad_bits,
         pack_params=args.pack_params,
         repack_every=args.repack_every,
+        plan_path=args.plan,
     )
 
     if args.reduced:

@@ -1,5 +1,6 @@
 from repro.serving.engine import ServeEngine, Request  # noqa: F401
 from repro.serving.speculative import (  # noqa: F401
+    DraftController,
     SpeculativeEngine,
     resolve_draft_bits,
     resolve_draft_kv_bits,

@@ -86,13 +86,18 @@ class ServeEngine:
     pack_weights: bool = False     # pack params at the planned width
     prefill_chunk: int = 16        # prompt tokens ingested per prefill call
     sample_seed: Optional[int] = None  # None: fresh nonce per engine
+    # a calibrated per-leaf CompressionPlan (core.calibrate / --plan file);
+    # supplying one implies packing — it replaces the uniform_plan the
+    # config width would otherwise pin, so every leaf packs at its tuned
+    # width and draft derivation steps each leaf individually
+    plan: Optional[Any] = None
 
     def __post_init__(self):
         self.lm = LM(self.cfg)
         self.params = self.lm.init(prng_key(0))
         self.weight_plan = None
-        if self.pack_weights:
-            self.weight_plan = uniform_plan(
+        if self.pack_weights or self.plan is not None:
+            self.weight_plan = self.plan or uniform_plan(
                 self.params, self.cfg.resolved_weight_bits)
             self.params = repack(self.params, self.weight_plan)
         # both the residency planner and kv_bytes_per_token read the same

@@ -38,10 +38,75 @@ import numpy as np
 
 from repro.compat import jit
 from repro.core.compress import derive_plan, repack, uniform_plan
-from repro.core.formats import ladder_snap
+from repro.core.formats import FLOAT_LADDER, ladder_snap
 from repro.core.tensor_store import tree_bytes
 from repro.models.lm import LM
 from repro.serving.engine import ServeEngine, sample_per_slot
+
+
+@dataclasses.dataclass
+class DraftController:
+    """Adaptive retuning of the draft's (width, k) from live acceptance.
+
+    A single static ladder rung is demonstrably the wrong knob across
+    configs (BENCH_speculative.json: stablelm's AF8 draft accepts 0.15
+    of its proposals while qwen3's AF12 accepts 0.89), so the controller
+    closes the loop at serve time: it maintains an EWMA of the
+    per-window acceptance rate (committed drafts / proposed drafts) and,
+    once a window has accrued ``min_proposals`` proposals,
+
+    * **widens** the draft one Table 3 rung (re-derive + repack, never
+      re-tune) when the EWMA falls below ``floor`` — a draft that is
+      wrong most of the time wastes every byte it streams;
+    * at the widest legal rung (one below the target) it **shrinks k**
+      instead, down to ``min_k`` — fewer wasted proposals per tick;
+    * **narrows** one rung when the EWMA exceeds ``ceiling`` (saturated
+      acceptance means the draft is paying for precision the prefix
+      rule never examines), floored at AF8.
+
+    ``k`` never *increases*: admission validated every resident request
+    against ``max_seq_len`` headroom at the initial k, so growing k
+    mid-flight could overflow the KV cache of an in-flight sequence.
+    Retuning repacks draft weights only — both KV caches keep their
+    shapes, so a retune is safe between any two ticks. All of this moves
+    acceptance statistics, never emitted tokens: the full-width target
+    still verifies every committed token.
+    """
+
+    floor: float = 0.5          # EWMA below this: widen (or shrink k)
+    ceiling: float = 0.95       # EWMA above this: narrow
+    alpha: float = 0.5          # EWMA weight of the newest window
+    min_proposals: int = 64     # proposals per decision window
+    min_k: int = 1
+
+    def __post_init__(self):
+        if not (0.0 <= self.floor < self.ceiling <= 1.0):
+            raise ValueError(
+                f"need 0 <= floor < ceiling <= 1, got "
+                f"({self.floor}, {self.ceiling})")
+        if self.min_proposals < 1:
+            raise ValueError("min_proposals must be >= 1")
+
+    def update(self, ewma: Optional[float], rate: float) -> float:
+        return rate if ewma is None else (
+            self.alpha * rate + (1 - self.alpha) * ewma)
+
+    def decide(self, ewma: float, draft_bits: int, k: int,
+               wbits: int) -> Optional[Any]:
+        """Pure policy: -> ("widen"|"narrow", bits) | ("shrink_k", k) |
+        None. Separated from the engine so the ladder walk is unit-
+        testable without packing any weights."""
+        if ewma < self.floor:
+            wider = next((r for r in FLOAT_LADDER
+                          if draft_bits < r < wbits), None)
+            if wider is not None:
+                return ("widen", wider)
+            if k > self.min_k:
+                return ("shrink_k", k - 1)
+            return None
+        if ewma > self.ceiling and draft_bits > FLOAT_LADDER[0]:
+            return ("narrow", ladder_snap(draft_bits, below=True))
+        return None
 
 
 def resolve_draft_bits(cfg) -> int:
@@ -85,6 +150,8 @@ class SpeculativeEngine(ServeEngine):
     k: int = 4                          # drafted tokens per tick
     draft_bits: Optional[int] = None    # override the config knob
     draft_kv_bits: Optional[int] = None  # override the draft-KV knob
+    adaptive: bool = False              # retune (width, k) from acceptance
+    controller: Optional[DraftController] = None
 
     def __post_init__(self):
         super().__post_init__()
@@ -109,9 +176,11 @@ class SpeculativeEngine(ServeEngine):
         self.draft_bits = dbits
         # Derive the draft's plan from the target's and re-encode the
         # *existing* leaves (packed target: code-level repack; plain
-        # target: first packing) — never re-tuned.
-        base_plan = self.weight_plan or uniform_plan(self.params, wbits)
-        self.draft_plan = derive_plan(base_plan, wbits - dbits)
+        # target: first packing) — never re-tuned. The base plan is kept:
+        # the adaptive controller re-derives from it at other rungs.
+        self._base_plan = self.weight_plan or uniform_plan(
+            self.params, wbits)
+        self.draft_plan = derive_plan(self._base_plan, wbits - dbits)
         self.draft_params = repack(self.params, self.draft_plan)
         # The draft's KV stream narrows too: its decode state packs at
         # draft_kv_bits (knob, else one ladder rung below the target's
@@ -151,10 +220,24 @@ class SpeculativeEngine(ServeEngine):
         self.slot_ticks = 0
         self.proposed = 0
         self.accepted = 0
+        # adaptive controller state: EWMA over per-window acceptance,
+        # window anchors into the monotone counters, and an event log
+        # with counter snapshots so before/after acceptance is computable
+        # from the stats alone (benchmarks/calibration.py reads it).
+        if self.adaptive and self.controller is None:
+            self.controller = DraftController()
+        self._initial_k = self.k
+        self._ewma: Optional[float] = None
+        self._window_proposed = 0
+        self._window_accepted = 0
+        self.retune_events: List[Dict[str, Any]] = []
 
     @property
     def _seq_headroom(self) -> int:
-        return self.k
+        # headroom is pinned at the *initial* k: the controller may
+        # shrink k later, but admitted requests were validated against
+        # this bound and k never grows past it
+        return self._initial_k
 
     # -- draft ---------------------------------------------------------------
     def _make_draft_fn(self):
@@ -240,7 +323,67 @@ class SpeculativeEngine(ServeEngine):
             self.draft_state, dlen0 + commits)
         self._last_tokens = jnp.asarray(last)
         self.spec_ticks += 1
+        if self.adaptive:
+            self._maybe_retune()
         return out
+
+    # -- adaptive retuning ----------------------------------------------------
+    def _maybe_retune(self) -> None:
+        """One controller step: fold the finished window into the EWMA
+        and apply at most one ladder move. Runs between ticks, so the
+        repacked draft weights are next used on a fresh draft pass."""
+        wp = self.proposed - self._window_proposed
+        wa = self.accepted - self._window_accepted
+        if wp < self.controller.min_proposals:
+            return
+        self._ewma = self.controller.update(self._ewma, wa / max(wp, 1))
+        self._window_proposed = self.proposed
+        self._window_accepted = self.accepted
+        action = self.controller.decide(
+            self._ewma, self.draft_bits, self.k,
+            self.cfg.resolved_weight_bits)
+        if action is None:
+            return
+        kind, val = action
+        self.retune_events.append({
+            "tick": self.spec_ticks,
+            "action": kind,
+            "from_bits": self.draft_bits,
+            "to_bits": val if kind != "shrink_k" else self.draft_bits,
+            "from_k": self.k,
+            "to_k": val if kind == "shrink_k" else self.k,
+            "ewma": self._ewma,
+            "proposed": self.proposed,
+            "accepted": self.accepted,
+        })
+        if kind == "shrink_k":
+            self._set_k(val)
+        else:
+            self._set_draft_bits(val)
+        # the old operating point's evidence doesn't describe the new
+        # one — restart the EWMA so the next decision is post-retune only
+        self._ewma = None
+
+    def _set_draft_bits(self, bits: int) -> None:
+        """Re-derive the draft at another rung and repack its weights
+        from the target's leaves — no re-tuning, no KV-shape change (the
+        draft *cache* keeps its width; only weight codes re-encode)."""
+        wbits = self.cfg.resolved_weight_bits
+        if not bits < wbits:
+            raise ValueError(
+                f"retuned draft width {bits} must stay below {wbits}")
+        self.draft_bits = bits
+        self.draft_plan = derive_plan(self._base_plan, wbits - bits)
+        self.draft_params = repack(self.params, self.draft_plan)
+
+    def _set_k(self, k: int) -> None:
+        """Shrink the per-tick proposal count. Never grows past the
+        initial k — admission headroom was validated against it."""
+        if not 1 <= k <= self._initial_k:
+            raise ValueError(
+                f"k must be in [1, {self._initial_k}], got {k}")
+        self.k = k
+        self._draft_k = jit(self._make_draft_fn(), donate_argnums=(1,))
 
     def _accept_greedy(self, drafts: np.ndarray,
                        cand: np.ndarray) -> List[List[int]]:
@@ -358,4 +501,24 @@ class SpeculativeEngine(ServeEngine):
             proposed=self.proposed,
             accepted=self.accepted,
         )
+        if self.adaptive:
+            stats.update(
+                adaptive=True,
+                initial_k=self._initial_k,
+                retunes=len(self.retune_events),
+                retune_events=list(self.retune_events),
+                post_retune_acceptance=self.post_retune_acceptance,
+            )
         return stats
+
+    @property
+    def post_retune_acceptance(self) -> float:
+        """Acceptance over the proposals made *after* the last retune —
+        the controller's delivered operating point (equals the lifetime
+        rate when no retune fired)."""
+        if not self.retune_events:
+            return self.acceptance_rate
+        last = self.retune_events[-1]
+        dp = self.proposed - last["proposed"]
+        da = self.accepted - last["accepted"]
+        return da / max(dp, 1)

@@ -68,6 +68,11 @@ class TrainConfig:
     # re-encode to the plan width every repack_every steps.
     pack_params: bool = False
     repack_every: int = 1
+    # calibrated plan source for packed-master mode: a plan JSON written
+    # by core.calibrate / repro.tuning.calibrate. None keeps the uniform
+    # plan at the config's resolved width. A checkpoint's manifest plan
+    # still wins on resume (the codes on disk were encoded with it).
+    plan_path: Optional[str] = None
 
 
 def _grad_loop(loss_fn, diff_arg, batch, tc: TrainConfig):
@@ -188,10 +193,15 @@ class Trainer:
 
     def _build_packed(self, params):
         """(packed, masters) for packed-master mode: the plan covers every
-        float matmul leaf at the config's resolved width; the packed tree
-        mirrors the param structure (planned leaves as codes, the few
-        unplanned riders copied dense so the two donated trees never
-        alias a buffer); the masters are the dense params themselves."""
+        float matmul leaf — per-leaf tuned widths when the config names a
+        calibrated plan file, else the config's resolved width uniformly;
+        the packed tree mirrors the param structure (planned leaves as
+        codes, the few unplanned riders copied dense so the two donated
+        trees never alias a buffer); the masters are the dense params
+        themselves."""
+        if self.plan is None and self.tc.plan_path:
+            from repro.core.compress import CompressionPlan
+            self.plan = CompressionPlan.load(self.tc.plan_path)
         self.plan = self.plan or uniform_plan(
             params, self.cfg.resolved_weight_bits)
         packed = repack(params, self.plan)

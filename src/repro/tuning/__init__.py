@@ -1,0 +1,8 @@
+"""Offline tuning drivers: turn the static-analysis toolchain into
+artifacts the runtime consumes (``repro.tuning.calibrate`` emits
+``CompressionPlan`` JSON files for ``--plan`` / ``plan_path``)."""
+from repro.core.calibrate import (  # noqa: F401
+    CalibrationResult,
+    calibrate,
+    derive_int_bits,
+)

@@ -1,0 +1,349 @@
+"""Calibration: config-seeded range analysis, the quality-gated tensor
+tuning pass, plan JSON round-trips (file + checkpoint manifest), the
+plan-aware engines, and the adaptive draft controller."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import prng_key
+from repro.configs import get_config
+from repro.core.calibrate import calibrate, derive_int_bits, float_leaves
+from repro.core.compress import (
+    CompressionPlan,
+    derive_plan,
+    path_str,
+    uniform_plan,
+)
+from repro.core.formats import FLOAT_LADDER
+from repro.core.quality import QualitySpec, loss_delta
+from repro.core.range_analysis import Interval, input_specs
+from repro.core.tensor_store import is_packed
+from repro.serving import DraftController, ServeEngine, SpeculativeEngine
+
+
+def _tiny_cfg(name="qwen3_8b"):
+    return get_config(name).reduced()
+
+
+def _micro_cfg():
+    """Smaller than reduced(): keeps the full-pass calibrate test fast."""
+    return dataclasses.replace(
+        _tiny_cfg(), n_layers=1, d_model=64, n_heads=2, n_kv_heads=1,
+        d_ff=128, vocab_size=128, head_dim=32)
+
+
+# -- satellite 1: input_specs seeded from ModelConfig -------------------------
+
+def test_input_specs_derive_from_config_bounds():
+    cfg = _tiny_cfg()                     # dense: no expert stream
+    specs = input_specs(cfg, 64)
+    assert specs["tokens"] == Interval(0, cfg.vocab_size - 1)
+    assert specs["labels"] == Interval(0, cfg.vocab_size - 1)
+    assert specs["positions"] == Interval(0, 63)
+    assert specs["len"] == Interval(0, 64)
+    assert "expert_ids" not in specs
+
+    moe = _tiny_cfg("deepseek_moe_16b")
+    mspecs = input_specs(moe, 64)
+    assert mspecs["expert_ids"] == Interval(0, moe.n_experts - 1)
+
+    with pytest.raises(ValueError, match="max_seq_len"):
+        input_specs(cfg, 0)
+
+
+def test_derive_int_bits_are_analysis_outputs():
+    cfg = _tiny_cfg()                     # vocab 512 -> 9 unsigned bits
+    bits = derive_int_bits(cfg, 64)
+    assert bits["inputs/tokens"] == (9, False)
+    assert bits["inputs/labels"] == (9, False)
+    # positions go through the +1/clamp transfer: still < 64 -> 6 bits
+    assert bits["inputs/positions"] == (6, False)
+    assert bits["inputs/len"] == (7, False)      # 64 needs 7 bits
+    assert all(k.startswith("inputs/") for k in bits)
+
+    moe = _tiny_cfg("deepseek_moe_16b")
+    mbits = derive_int_bits(moe, 64)
+    want, signed = Interval(0, moe.n_experts - 1).bits()
+    assert mbits["inputs/expert_ids"] == (want, signed)
+
+
+def test_int_stream_keys_never_touch_param_leaves():
+    """Plan int streams live under inputs/... — repacking a param tree
+    with them present must leave every leaf alone."""
+    from repro.core.compress import repack
+    tree = {"w": jnp.ones((4, 8), jnp.float32),
+            "tokens": jnp.ones((4,), jnp.int32)}
+    plan = CompressionPlan(float_bits={},
+                           int_bits=derive_int_bits(_tiny_cfg(), 64))
+    out = repack(tree, plan)
+    assert out["w"] is tree["w"]
+    assert out["tokens"] is tree["tokens"]
+
+
+# -- satellite 2: plan JSON round-trip ----------------------------------------
+
+def _mixed_plan():
+    return CompressionPlan(
+        float_bits={"blocks/0/w": 12, "embed": 8, "head": 20},
+        int_bits={"inputs/tokens": (9, False), "inputs/len": (7, False)},
+        tune_evals=17,
+    )
+
+
+def test_plan_json_round_trip(tmp_path):
+    plan = _mixed_plan()
+    p = os.path.join(tmp_path, "plan.json")
+    plan.save(p)
+    with open(p) as f:
+        raw = json.load(f)
+    assert raw["version"] == 1
+    assert raw["int_bits"]["inputs/tokens"] == [9, False]
+    loaded = CompressionPlan.load(p)
+    assert loaded == plan
+    # stable, diff-friendly: keys sorted in the file
+    assert list(raw["float_bits"]) == sorted(raw["float_bits"])
+
+
+def test_plan_from_jsonable_back_compat_and_version_gate():
+    plan = _mixed_plan()
+    bare = plan.to_jsonable()
+    del bare["version"]                   # pre-codec manifest shape
+    assert CompressionPlan.from_jsonable(bare) == plan
+    with pytest.raises(ValueError, match="schema"):
+        CompressionPlan.from_jsonable({"version": 99})
+
+
+def test_checkpoint_manifest_reuses_plan_codec():
+    from repro.checkpoint.manager import (
+        _plan_from_jsonable,
+        _plan_to_jsonable,
+    )
+    plan = _mixed_plan()
+    entry = _plan_to_jsonable(plan)
+    assert entry == plan.to_jsonable()    # one schema, both carriers
+    assert _plan_from_jsonable(entry) == plan
+    assert _plan_to_jsonable(None) is None
+    assert _plan_from_jsonable(None) is None
+
+
+def test_checkpoint_round_trips_mixed_plan(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path))
+    plan = _mixed_plan()
+    mgr.save(0, {"x": jnp.ones((2, 2))}, blocking=True, plan=plan)
+    _, _, restored = mgr.restore(with_plan=True)
+    assert restored == plan
+
+
+# -- the quality gate ---------------------------------------------------------
+
+def test_loss_delta_metric_and_spec():
+    ref = jnp.asarray([1.0, 2.0])
+    out = jnp.asarray([1.03, 1.98])
+    assert loss_delta(ref, out) == pytest.approx(0.03, abs=1e-6)
+    spec = QualitySpec("loss_delta", 0.05)
+    assert spec.accepts(ref, out)
+    assert not spec.accepts(ref, jnp.asarray([1.2, 2.0]))
+    assert spec.metric(ref, out) == pytest.approx(0.03, abs=1e-6)
+    # metric() mirrors the other families too
+    assert QualitySpec("deviation", 10.0).metric(
+        jnp.ones((4,)), jnp.ones((4,))) == 0.0
+
+
+# -- the calibration pass -----------------------------------------------------
+
+def test_calibrate_emits_gated_mixed_width_plan():
+    cfg = _micro_cfg()
+    quality = QualitySpec("loss_delta", 0.05)
+    res = calibrate(cfg, quality, n_batches=1, batch_size=2, seq_len=8,
+                    seed=0, max_seq_len=32)
+    # float widths: ladder rungs only, on real param leaves
+    assert res.plan.float_bits
+    assert all(b in FLOAT_LADDER for b in res.plan.float_bits.values())
+    # int widths: derived streams, inputs/ namespace
+    assert res.plan.int_bits == derive_int_bits(cfg, 32)
+    # the gate held and the tuned plan beat the uniform width
+    assert res.accepted
+    assert res.metric <= quality.threshold + 1e-9
+    assert res.mean_float_bits < res.uniform_bits
+    assert res.footprint_ratio < res.uniform_ratio
+    assert res.tune_evals > 0
+    s = res.summary()
+    assert s["beats_uniform"] and s["accepted"]
+    json.dumps(s)                         # artifact-serializable
+
+    # the plan's keys are the same path_str keys uniform_plan uses, so
+    # serving/training can repack the identical leaves
+    from repro.models.lm import LM
+    lm_keys = set(uniform_plan(LM(cfg).init(prng_key(0)), 16).float_bits)
+    assert set(res.plan.float_bits) <= lm_keys
+
+
+def test_float_leaves_keys_match_plan_paths():
+    tree = {"a": jnp.ones((4, 4), jnp.float32),
+            "b": {"c": jnp.ones((2, 2), jnp.float32)},
+            "norm": jnp.ones((4,), jnp.float32),
+            "i": jnp.ones((4, 4), jnp.int32)}
+    leaves = float_leaves(tree)
+    assert set(leaves) == {"a", "b/c"}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    keys = {path_str(p) for p, _ in flat}
+    assert set(leaves) <= keys
+
+
+# -- plan-aware engines -------------------------------------------------------
+
+def test_serve_engine_packs_at_mixed_plan_widths():
+    cfg = _tiny_cfg()
+    base = ServeEngine(cfg, max_seq_len=32, max_slots=2, pack_weights=True)
+    keys = sorted(base.weight_plan.float_bits)
+    mixed = {k: (8 if i % 2 else 12) for i, k in enumerate(keys)}
+    plan = CompressionPlan(float_bits=mixed, int_bits={})
+    eng = ServeEngine(cfg, max_seq_len=32, max_slots=2, plan=plan)
+    assert eng.weight_plan is plan        # the plan replaces uniform
+    got = {}
+
+    def visit(path, leaf):
+        if is_packed(leaf):
+            got[path_str(path)] = leaf.bits
+    jax.tree_util.tree_map_with_path(visit, eng.params, is_leaf=is_packed)
+    assert got == mixed                   # every leaf at its tuned width
+
+
+def test_speculative_derives_draft_from_mixed_plan_per_leaf():
+    cfg = _tiny_cfg()                     # wbits 16, draft knob 12
+    base = ServeEngine(cfg, max_seq_len=32, max_slots=2, pack_weights=True)
+    keys = sorted(base.weight_plan.float_bits)
+    mixed = {k: (12 if i % 2 else 16) for i, k in enumerate(keys)}
+    plan = CompressionPlan(float_bits=mixed, int_bits={})
+    spec = SpeculativeEngine(cfg, max_seq_len=32, max_slots=2, k=2,
+                             plan=plan)
+    want = derive_plan(plan, 16 - spec.draft_bits).float_bits
+    got = {}
+
+    def visit(path, leaf):
+        if is_packed(leaf):
+            got[path_str(path)] = leaf.bits
+    jax.tree_util.tree_map_with_path(visit, spec.draft_params,
+                                     is_leaf=is_packed)
+    assert got == want                    # per-leaf ladder stepping
+    assert set(got.values()) == {8, 12}   # genuinely mixed draft
+    # end-to-end: both mixed-width trees decode (fused matmul dispatches
+    # each leaf at its own width inside one tree)
+    rid = spec.submit([1, 2], max_new_tokens=3)
+    spec.run_until_drained()
+    assert len(spec.result(rid)) == 3
+
+
+# -- the adaptive draft controller --------------------------------------------
+
+def test_controller_decide_widens_then_shrinks_k():
+    c = DraftController(floor=0.5, ceiling=0.95, min_k=1)
+    # low acceptance at AF8 under a 16-bit target: widen one rung
+    assert c.decide(0.2, 8, 4, 16) == ("widen", 12)
+    # at the widest legal rung: shrink k instead
+    assert c.decide(0.2, 12, 4, 16) == ("shrink_k", 3)
+    # at the widest rung and k floor: nothing left to do
+    assert c.decide(0.2, 12, 1, 16) is None
+    # wider targets have more rungs to climb
+    assert c.decide(0.2, 8, 4, 32) == ("widen", 12)
+    assert c.decide(0.2, 24, 4, 32) == ("widen", 28)
+
+
+def test_controller_decide_narrows_on_saturation_with_floor():
+    c = DraftController()
+    assert c.decide(0.99, 12, 4, 16) == ("narrow", 8)
+    assert c.decide(0.99, 8, 4, 16) is None       # AF8 floor
+    assert c.decide(0.7, 12, 4, 16) is None       # inside the band
+
+
+def test_controller_ewma_and_validation():
+    c = DraftController(alpha=0.5)
+    assert c.update(None, 0.4) == 0.4             # first window seeds
+    assert c.update(0.4, 0.8) == pytest.approx(0.6)
+    with pytest.raises(ValueError, match="floor"):
+        DraftController(floor=0.9, ceiling=0.5)
+    with pytest.raises(ValueError, match="min_proposals"):
+        DraftController(min_proposals=0)
+
+
+def test_adaptive_engine_retunes_and_stays_greedy_exact():
+    """Retuning mid-run repacks draft weights only — greedy outputs stay
+    token-for-token identical to the plain engine, and the event log
+    snapshots make before/after acceptance computable."""
+    cfg = _tiny_cfg("stablelm_12b")       # AF8 knob: low acceptance
+    prompts = [[1, 2, 3], [4, 5], [6]]
+    base = ServeEngine(cfg, max_seq_len=64, max_slots=2)
+    rb = [base.submit(p, max_new_tokens=6) for p in prompts]
+    base.run_until_drained()
+    spec = SpeculativeEngine(
+        cfg, max_seq_len=64, max_slots=2, k=3, adaptive=True,
+        controller=DraftController(min_proposals=12, min_k=2),
+        sample_seed=0)
+    assert spec.draft_bits == 8
+    rs = [spec.submit(p, max_new_tokens=6) for p in prompts]
+    stats = spec.run_until_drained()
+    for a, b in zip(rb, rs):
+        assert base.result(a) == spec.result(b)
+    assert stats["retunes"] == len(stats["retune_events"])
+    if stats["retunes"]:
+        ev = stats["retune_events"][0]
+        assert ev["action"] in ("widen", "narrow", "shrink_k")
+        assert ev["proposed"] <= stats["proposed"]
+        # widening moved the draft up the ladder, never past the target
+        assert 8 <= stats["draft_bits"] < cfg.resolved_weight_bits
+    assert 0.0 <= stats["post_retune_acceptance"] <= 1.0
+    # k never grows past the initial value (KV headroom contract)
+    assert stats["k"] <= stats["initial_k"]
+
+
+def test_adaptive_k_never_increases_and_bits_stay_below_target():
+    cfg = _tiny_cfg()
+    spec = SpeculativeEngine(cfg, max_seq_len=32, max_slots=2, k=2,
+                             adaptive=True)
+    with pytest.raises(ValueError):
+        spec._set_k(3)                    # growth is forbidden
+    with pytest.raises(ValueError):
+        spec._set_k(0)
+    with pytest.raises(ValueError):
+        spec._set_draft_bits(16)          # must stay below the target
+    spec._set_draft_bits(8)
+    assert spec.draft_bits == 8
+    bits = {l.bits for l in jax.tree_util.tree_leaves(
+        spec.draft_params, is_leaf=is_packed) if is_packed(l)}
+    assert bits == {8}
+    spec._set_k(1)
+    assert spec.k == 1 and spec._seq_headroom == 2   # headroom pinned
+
+
+# -- training plan source -----------------------------------------------------
+
+def test_trainer_build_packed_reads_plan_file(tmp_path):
+    from repro.train import TrainConfig, Trainer
+    cfg = _micro_cfg()
+    p = os.path.join(tmp_path, "plan.json")
+    tr0 = Trainer(cfg, TrainConfig(steps=1, seq_len=8, global_batch=2,
+                                   pack_params=True))
+    params = tr0.lm.init(prng_key(0))
+    # a calibrated-style mixed plan over the real leaves
+    keys = sorted(uniform_plan(params, 16).float_bits)
+    mixed = CompressionPlan(
+        float_bits={k: (8 if i % 2 else 12) for i, k in enumerate(keys)},
+        int_bits={})
+    mixed.save(p)
+    tr = Trainer(cfg, TrainConfig(steps=1, seq_len=8, global_batch=2,
+                                  pack_params=True, plan_path=p))
+    packed, masters = tr._build_packed(params)
+    assert tr.plan == mixed
+    got = {}
+
+    def visit(path, leaf):
+        if is_packed(leaf):
+            got[path_str(path)] = leaf.bits
+    jax.tree_util.tree_map_with_path(visit, packed, is_leaf=is_packed)
+    assert got == mixed.float_bits

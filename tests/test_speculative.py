@@ -128,6 +128,64 @@ def test_derive_plan_distinctness_property(bits, steps):
 
 
 @settings(max_examples=25)
+@given(st.sampled_from((8, 12, 16, 20, 24, 28)),
+       st.sampled_from((8, 12, 16, 20, 24, 28)),
+       st.sampled_from((8, 12, 16, 20, 24, 28)),
+       st.sampled_from((4, 8)))
+def test_derive_plan_mixed_widths_step_per_leaf(wa, wb, wc, delta):
+    """A calibrated *mixed*-width plan derives per leaf: every float leaf
+    steps down the ladder by its own delta (snapped, floored at AF8),
+    int streams never narrow, and order between leaves is preserved —
+    a narrower leaf never ends up wider than a wider one."""
+    from repro.core.formats import ladder_snap
+    plan = CompressionPlan(
+        float_bits={"a": wa, "b": wb, "c": wc},
+        int_bits={"inputs/tokens": (9, False), "inputs/len": (7, False)},
+    )
+    d = derive_plan(plan, delta)
+    for k in ("a", "b", "c"):
+        assert d.float_bits[k] == ladder_snap(plan.float_bits[k] - delta)
+        assert d.float_bits[k] >= FLOAT_LADDER[0]          # AF8 floor
+        assert d.float_bits[k] <= plan.float_bits[k]
+    # monotone: leaf ordering survives derivation
+    for x in ("a", "b", "c"):
+        for y in ("a", "b", "c"):
+            if plan.float_bits[x] <= plan.float_bits[y]:
+                assert d.float_bits[x] <= d.float_bits[y]
+    assert d.int_bits == plan.int_bits                     # never narrow
+    assert d.int_bits is not plan.int_bits
+
+
+@settings(max_examples=15)
+@given(st.sampled_from((8, 12, 16, 20)), st.sampled_from((8, 12, 16, 20)))
+def test_repack_mixed_plan_idempotent_at_width(wa, wb):
+    """Repacking a tree already at a mixed plan's widths is a no-op per
+    leaf (identical objects, zero re-encode error), and int streams in
+    the plan never touch float param leaves."""
+    rng = np.random.default_rng(wa * 32 + wb)
+    tree = {
+        "a": jnp.asarray(rng.standard_normal((4, 32)).astype(np.float32)),
+        "b": jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32)),
+        "norm": jnp.ones((16,), jnp.float32),
+    }
+    plan = CompressionPlan(
+        float_bits={"a": wa, "b": wb},
+        int_bits={"inputs/tokens": (9, False)},   # stream key: no leaf
+    )
+    once = repack(tree, plan)
+    assert once["a"].bits == wa and once["b"].bits == wb
+    assert once["norm"] is tree["norm"]
+    twice = repack(once, plan)
+    assert twice["a"] is once["a"]                # at-width: identical
+    assert twice["b"] is once["b"]
+    # deriving then repacking steps each leaf to its own rung
+    d = derive_plan(plan, 4)
+    stepped = repack(once, d)
+    assert stepped["a"].bits == d.float_bits["a"]
+    assert stepped["b"].bits == d.float_bits["b"]
+
+
+@settings(max_examples=25)
 @given(st.sampled_from((8, 12, 16, 20, 24, 28)))
 def test_repack_at_width_is_noop_property(bits):
     """Repacking at the leaf's current width must return the identical
