@@ -30,6 +30,7 @@ def main() -> None:
     )
     from benchmarks.perf_cells import bench_perf
     from benchmarks.roofline import bench_roofline
+    from benchmarks.serving_paged import bench_serving_paged
     from benchmarks.serving_residency import bench_residency
     from benchmarks.speculative import bench_speculative
     from benchmarks.train_packed import bench_train_packed
@@ -47,6 +48,7 @@ def main() -> None:
         "perf": bench_perf,
         "roofline": bench_roofline,
         "speculative": bench_speculative,
+        "serving_paged": bench_serving_paged,
         "train_packed": bench_train_packed,
         "calibration": bench_calibration,
     }

@@ -1,0 +1,162 @@
+"""Paged-KV serving bench: per-request KV bytes, over-commit, sharing.
+
+The paper's capacity argument, applied to the serving cache: a fixed
+physical file (the ``KVPagePool``) serves more logical state when each
+request holds only the pages its *actual* length needs, instead of one
+dense ``max_seq_len`` region per slot. Three measurements per config:
+
+  * **KV bytes per request, dense vs paged** — dense always provisions
+    ``max_seq_len`` rows; paged provisions ``pages_peak * page_size``
+    rows, so short requests stop paying for the worst case;
+  * **over-commit under a mixed-length workload** — with the pool sized
+    *below* slots x pages-per-sequence, the engine must still admit more
+    concurrent residents than the pool could hold as dense regions
+    (peak residents > pool_pages / pages_per_seq), token-exactly;
+  * **prefix-hit rate on a shared system prompt** — identical prompt
+    prefixes dedup page-for-page through the chain-key registry.
+
+Greedy outputs are asserted identical to the dense engine in-bench for
+both traffics — an ERROR row (and CI failure) on any divergence. Writes
+``BENCH_serving_paged.json`` for CI to archive and returns the usual
+``(name, us, derived)`` CSV rows.
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Tuple
+
+import numpy as np
+
+ARTIFACT = "BENCH_serving_paged.json"
+CONFIGS = ("qwen3_8b", "phi3_medium_14b")
+SEQ = 64
+PAGE = 8
+SLOTS = 6
+MAX_NEW = 8
+N_REQUESTS = 12
+SYSTEM_PROMPT_LEN = 24
+
+
+def _mixed_prompts(cfg, rng) -> List[List[int]]:
+    return [list(rng.integers(1, cfg.vocab_size, int(n)))
+            for n in rng.integers(0, 25, N_REQUESTS)]
+
+
+def _shared_prompts(cfg, rng) -> List[List[int]]:
+    system = list(rng.integers(1, cfg.vocab_size, SYSTEM_PROMPT_LEN))
+    return [system + list(rng.integers(1, cfg.vocab_size, int(n)))
+            for n in rng.integers(1, 9, N_REQUESTS)]
+
+
+def _drain_tracked(eng, prompts):
+    """Submit, drain via step(), return (results, stats, requests,
+    peak concurrent residents)."""
+    rids = [eng.submit(p, max_new_tokens=MAX_NEW) for p in prompts]
+    reqs = {r.rid: r for r in list(eng._queue) + list(
+        eng._active.values())}
+    peak = len(eng._active)
+    while eng._queue or eng._active:
+        eng.step()
+        peak = max(peak, len(eng._active))
+    stats = eng.run_until_drained()        # drained: stats only
+    return [eng.result(r) for r in rids], stats, reqs, peak
+
+
+def bench_serving_paged() -> List[Tuple[str, float, str]]:
+    from repro.configs import get_config
+    from repro.serving import ServeEngine
+
+    rows: List[Tuple[str, float, str]] = []
+    artifact = {"bench": "serving_paged", "max_seq_len": SEQ,
+                "kv_page_size": PAGE, "slots": SLOTS, "configs": []}
+    pages_per_seq = SEQ // PAGE
+    # pool deliberately below slots x pages/seq: dense regions would only
+    # fit pool_pages / pages_per_seq residents
+    pool_pages = (SLOTS * pages_per_seq) // 2
+
+    for name in CONFIGS:
+        cfg = get_config(name).reduced()
+        kvb = cfg.kv_bytes_per_token()
+        rng = np.random.default_rng(23)
+        mixed = _mixed_prompts(cfg, rng)
+
+        dense = ServeEngine(cfg, max_seq_len=SEQ, max_slots=SLOTS)
+        dres, dstats, _, _ = _drain_tracked(dense, mixed)
+        paged = ServeEngine(cfg, max_seq_len=SEQ, max_slots=SLOTS,
+                            paged=True, kv_page_size=PAGE,
+                            kv_pool_pages=pool_pages)
+        pres, pstats, reqs, peak_live = _drain_tracked(paged, mixed)
+        if dres != pres:
+            raise AssertionError(
+                f"{name}: paged output diverged from the dense engine "
+                "under greedy decoding (mixed-length workload)")
+
+        dense_capacity = pool_pages // pages_per_seq
+        if peak_live <= dense_capacity:
+            raise AssertionError(
+                f"{name}: paged engine admitted only {peak_live} "
+                f"concurrent residents — no better than the {pool_pages} "
+                f"pages held as dense regions ({dense_capacity})")
+
+        # per-request KV bytes: dense strands max_seq_len rows per slot;
+        # paged holds pages_peak actual pages
+        dense_bytes = SEQ * kvb
+        paged_bytes = [r.pages_peak * PAGE * kvb for r in reqs.values()]
+        scaling = max(paged_bytes) > min(paged_bytes)  # length-dependent
+        if not all(b <= dense_bytes for b in paged_bytes):
+            raise AssertionError(
+                f"{name}: a paged request provisioned more KV bytes "
+                "than the dense worst case")
+
+        shared = _shared_prompts(cfg, rng)
+        dense2 = ServeEngine(cfg, max_seq_len=SEQ, max_slots=SLOTS)
+        dres2, _, _, _ = _drain_tracked(dense2, shared)
+        paged2 = ServeEngine(cfg, max_seq_len=SEQ, max_slots=SLOTS,
+                             paged=True, kv_page_size=PAGE)
+        pres2, sstats, _, _ = _drain_tracked(paged2, shared)
+        if dres2 != pres2:
+            raise AssertionError(
+                f"{name}: paged output diverged from the dense engine "
+                "under greedy decoding (shared-prefix workload)")
+        hit_rate = sstats["prefix_hit_rate"]
+        if not hit_rate > 0:
+            raise AssertionError(
+                f"{name}: shared system prompt produced no prefix hits")
+
+        mean_paged = sum(paged_bytes) / len(paged_bytes)
+        rows.append((
+            f"serving_paged.{name}",
+            pstats["wall_s"] * 1e6 / max(pstats["ticks"], 1),
+            f"peak_residents={peak_live};dense_equiv_capacity="
+            f"{dense_capacity};mean_kv_bytes_per_request={mean_paged:.0f};"
+            f"dense_kv_bytes_per_request={dense_bytes};"
+            f"pool_peak_utilization={pstats['pool_peak_utilization']:.2f};"
+            f"prefix_hit_rate={hit_rate:.2f}",
+        ))
+        artifact["configs"].append({
+            "config": name,
+            "kv_bits": cfg.resolved_kv_bits,
+            "kv_bytes_per_token": kvb,
+            "pool_pages": pool_pages,
+            "pages_per_seq": pages_per_seq,
+            "greedy_exact_mixed": dres == pres,
+            "greedy_exact_shared": dres2 == pres2,
+            "peak_concurrent_residents": peak_live,
+            "dense_equivalent_capacity": dense_capacity,
+            "overcommit": peak_live > dense_capacity,
+            "dense_kv_bytes_per_request": dense_bytes,
+            "paged_kv_bytes_per_request": sorted(paged_bytes),
+            "paged_bytes_scale_with_length": scaling,
+            "pool_utilization_final": pstats["pool_utilization"],
+            "pool_peak_utilization": pstats["pool_peak_utilization"],
+            "prefix_hit_rate": hit_rate,
+            "prefix_hits": sstats["prefix_hits"],
+            "prefix_queries": sstats["prefix_queries"],
+            "ticks_dense": dstats["ticks"],
+            "ticks_paged": pstats["ticks"],
+        })
+
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=2)
+    rows.append(("serving_paged.artifact", 0.0, ARTIFACT))
+    return rows

@@ -27,7 +27,7 @@ if ! $smoke_only; then
     python -m pytest -x -q \
         --deselect tests/test_distributed.py::test_dryrun_mesh_matrix
 
-    echo "== benchmark smoke (micro + perf + packed path + speculative + train packed + calibration) =="
+    echo "== benchmark smoke (micro + perf + packed path + speculative + serving paged + train packed + calibration) =="
     # packed_path runs the fused kernel in Pallas interpret mode for the
     # parity rows (2-D and batched-expert orientations), benchmarks the
     # MoE expert-bank chain and one train step (forward + fused backward
@@ -41,6 +41,11 @@ if ! $smoke_only; then
     # baseline, asserts loss parity within the plan width's tolerance,
     # the 2 x bits/32 train-step weight stream and the repack_every
     # staleness contract, and writes BENCH_train_packed.json;
+    # serving_paged drains mixed-length and shared-prefix traffic through
+    # the dense and paged engines, asserts greedy outputs identical, that
+    # an undersized pool still over-commits (peak residents beat the
+    # pool's dense-region capacity) with per-request KV bytes scaling
+    # with actual length, and writes BENCH_serving_paged.json;
     # calibration runs the static-analysis calibration pass on two zoo
     # configs (asserting the tuned mixed-width plan beats uniform at the
     # same quality gate) plus the adaptive draft controller (asserting
@@ -51,10 +56,11 @@ if ! $smoke_only; then
     # exits nonzero — so the rows that did succeed reach the CI log;
     # ERROR: rows or a nonzero exit fail the build.
     rm -f BENCH_packed_path.json BENCH_speculative.json \
-        BENCH_train_packed.json BENCH_calibration.json
+        BENCH_serving_paged.json BENCH_train_packed.json \
+        BENCH_calibration.json
     set +e
     bench_csv=$(python -m benchmarks.run \
-        --only micro,perf,packed_path,speculative,train_packed,calibration)
+        --only micro,perf,packed_path,speculative,serving_paged,train_packed,calibration)
     bench_rc=$?
     set -e
     printf '%s\n' "$bench_csv"
@@ -67,6 +73,8 @@ if ! $smoke_only; then
         echo "BENCH_packed_path.json artifact missing" >&2; exit 1; }
     test -f BENCH_speculative.json || {
         echo "BENCH_speculative.json artifact missing" >&2; exit 1; }
+    test -f BENCH_serving_paged.json || {
+        echo "BENCH_serving_paged.json artifact missing" >&2; exit 1; }
     test -f BENCH_train_packed.json || {
         echo "BENCH_train_packed.json artifact missing" >&2; exit 1; }
     test -f BENCH_calibration.json || {

@@ -16,9 +16,13 @@ the mode used for persistent tensor state at the framework level.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.formats import (
     REGISTER_BITS,
@@ -279,3 +283,197 @@ class SliceAllocator:
 def pack_operand_table(entries: Sequence[IndirectionEntry]) -> List[int]:
     """Emit the kernel's indirection-table image (one 32-bit word/entry)."""
     return [e.encode() for e in entries]
+
+
+# ---------------------------------------------------------------------------
+# KV page pool: the slice-allocation discipline lifted to serving KV state
+# ---------------------------------------------------------------------------
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation or reservation exceeds pool capacity."""
+
+
+class KVPagePool:
+    """Fixed physical file of KV pages handed out to logical requests.
+
+    This generalizes :class:`SliceAllocator`'s discipline — allocate
+    slices of a fixed physical file, expire them when their holder dies,
+    grab the lowest free unit first — from 4-bit register slices to
+    fixed-size KV-cache pages. The serving analogue of the indirection
+    table is the per-request *page table*: logical position ``p`` of a
+    request lives in physical page ``table[p // page_size]`` at row
+    ``p % page_size``, exactly as an architectural register's slices live
+    at the (reg, mask) positions of its :class:`IndirectionEntry`.
+
+    The pool is pure host-side bookkeeping (page ids, refcounts,
+    reservations, a prefix-hash registry); device buffers indexed by the
+    page ids it hands out are owned by the caller. Page id 0 is reserved
+    as the *scrap page* — the write target of unallocated table entries,
+    never handed out — so ids run 1..n_pages.
+
+    Three accounting buckets partition capacity:
+
+    * **used** — allocated pages (refcount >= 1);
+    * **reserved** — pages promised to admitted requests but not yet
+      allocated (``alloc(reserved=True)`` draws these down), so a
+      request admitted against its worst-case *own* length can never
+      deadlock mid-flight;
+    * **free** — ``n_pages - used - reserved``: what admission may still
+      promise to new requests.
+
+    Prefix sharing: a *full* page of prompt tokens registers under a
+    chain key (hash of the parent chain plus the page's tokens). A later
+    request whose prompt matches the chain retains the physical page
+    (refcount++) instead of recomputing it; when the refcount drops to
+    zero the page unregisters and returns to the free list (eviction of
+    finished requests' pages). Writers must copy-on-write a shared page
+    before mutating it (``refcount(page) > 1`` is the signal).
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 1:
+            raise ValueError(f"need at least 1 page, got {n_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: Deque[int] = collections.deque(range(1, n_pages + 1))
+        self._refcount: Dict[int, int] = {}
+        self._reserved = 0
+        self.peak_used = 0
+        # prefix-sharing registry + hit accounting
+        self._registry: Dict[bytes, int] = {}
+        self._page_key: Dict[int, bytes] = {}
+        self.prefix_hits = 0
+        self.prefix_queries = 0
+
+    # -- capacity accounting --------------------------------------------------
+    @property
+    def used(self) -> int:
+        return len(self._refcount)
+
+    @property
+    def reserved(self) -> int:
+        return self._reserved
+
+    @property
+    def free_pages(self) -> int:
+        """Pages neither allocated nor promised — the admission budget."""
+        return len(self._free) - self._reserved
+
+    @property
+    def utilization(self) -> float:
+        return self.used / self.n_pages
+
+    @property
+    def peak_utilization(self) -> float:
+        return self.peak_used / self.n_pages
+
+    def can_reserve(self, n: int) -> bool:
+        return 0 <= n <= self.free_pages
+
+    def reserve(self, n: int) -> None:
+        """Promise ``n`` pages to an admitted request (no page ids yet)."""
+        if n < 0:
+            raise ValueError(f"cannot reserve {n} pages")
+        if n > self.free_pages:
+            raise PoolExhausted(
+                f"cannot reserve {n} pages: {self.free_pages} free of "
+                f"{self.n_pages} ({self.used} used, {self._reserved} "
+                "reserved)")
+        self._reserved += n
+
+    def release(self, n: int) -> None:
+        """Return unallocated reservation (request finished early)."""
+        if not 0 <= n <= self._reserved:
+            raise ValueError(
+                f"cannot release {n} of {self._reserved} reserved pages")
+        self._reserved -= n
+
+    # -- allocate / free ------------------------------------------------------
+    def alloc(self, reserved: bool = False) -> int:
+        """Hand out the lowest free page id (first-fit, like ``_grab``).
+
+        ``reserved=True`` draws down a prior :meth:`reserve` promise;
+        otherwise the page comes from the unpromised free bucket.
+        """
+        if reserved:
+            if self._reserved < 1:
+                raise ValueError("alloc(reserved=True) without reservation")
+            self._reserved -= 1
+        elif len(self._free) <= self._reserved:
+            raise PoolExhausted(
+                f"pool exhausted: {self.n_pages} pages, {self.used} used, "
+                f"{self._reserved} reserved")
+        page = self._free.popleft()
+        self._refcount[page] = 1
+        self.peak_used = max(self.peak_used, self.used)
+        return page
+
+    def retain(self, page: int) -> None:
+        """Add a holder to an allocated (typically prefix-shared) page."""
+        if page not in self._refcount:
+            raise ValueError(f"retain of unallocated page {page}")
+        self._refcount[page] += 1
+
+    def free(self, page: int) -> None:
+        """Drop one holder; the last free returns the page to the pool
+        (and evicts its prefix-registry entry). Freeing an unallocated
+        page — including a double free — raises."""
+        rc = self._refcount.get(page)
+        if rc is None:
+            raise ValueError(
+                f"free of unallocated page {page} (double free?)")
+        if rc > 1:
+            self._refcount[page] = rc - 1
+            return
+        del self._refcount[page]
+        key = self._page_key.pop(page, None)
+        if key is not None:
+            self._registry.pop(key, None)
+        self._free.append(page)
+
+    def refcount(self, page: int) -> int:
+        return self._refcount.get(page, 0)
+
+    # -- prefix-sharing registry ----------------------------------------------
+    @staticmethod
+    def chain_key(parent: Optional[bytes], tokens: Sequence[int]) -> bytes:
+        """Key of a full page holding ``tokens`` whose predecessor chain
+        hashed to ``parent`` (None for the first page). Content-derived,
+        so two requests share iff their token prefixes agree page-for-
+        page from position 0 — which also pins identical positions, so
+        the cached KV rows (position-dependent rope included) are
+        bit-identical."""
+        h = hashlib.blake2b(digest_size=16)
+        h.update(parent if parent is not None else b"root")
+        h.update(np.asarray(list(tokens), np.int64).tobytes())
+        return h.digest()
+
+    def lookup(self, key: bytes) -> Optional[int]:
+        """Probe the registry; counts toward the prefix hit rate."""
+        self.prefix_queries += 1
+        page = self._registry.get(key)
+        if page is not None:
+            self.prefix_hits += 1
+        return page
+
+    def is_registered(self, key: bytes) -> bool:
+        """Non-counting probe (registration bookkeeping, not traffic)."""
+        return key in self._registry
+
+    def register(self, key: bytes, page: int) -> None:
+        """Publish an allocated page under its chain key — only once its
+        rows are actually written: a registered page is immediately
+        matchable, and a matcher reads it without recomputing. The entry
+        lives as long as some holder does (see :meth:`free`)."""
+        if page not in self._refcount:
+            raise ValueError(f"register of unallocated page {page}")
+        if key in self._registry:
+            raise ValueError("chain key already registered")
+        self._registry[key] = page
+        self._page_key[page] = key
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(self.prefix_queries, 1)

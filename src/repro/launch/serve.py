@@ -3,6 +3,7 @@
     python -m repro.launch.serve --arch qwen3_8b --requests 64 \
         [--kv-bits 8] [--max-seq-len 2048] [--reduced] \
         [--speculative 4] [--draft-bits 12] [--adaptive] \
+        [--paged] [--kv-page-size 16] [--kv-pool-pages N] \
         [--pack-weights] [--plan plan.json | --calibrate] \
         [--save-plan plan.json]
 
@@ -13,7 +14,11 @@ the narrow-draft self-speculative stepper: a draft repacked one ladder
 step down proposes k tokens per tick, the full-width model verifies them
 in one call — emitted tokens are unchanged, ticks drop by the acceptance
 rate; ``--adaptive`` lets the DraftController retune (draft width, k)
-from live acceptance. ``--plan plan.json`` packs weights at a calibrated
+from live acceptance. ``--paged`` swaps the per-slot dense KV regions
+for the block-granular ``KVPagePool``: per-request page tables, pages
+sized by ``--kv-page-size``, admission over-commits slots against a
+pool of ``--kv-pool-pages`` pages (default slots x pages/sequence —
+no over-commit), and identical prompt prefixes share refcounted pages. ``--plan plan.json`` packs weights at a calibrated
 per-leaf mixed-width plan; ``--calibrate`` runs the calibration pass
 (``core.calibrate``) in-process first, gated by ``--quality-kind`` /
 ``--quality-threshold``, and ``--save-plan`` writes the plan JSON for
@@ -43,6 +48,16 @@ def main() -> None:
     ap.add_argument("--draft-bits", type=int, default=None,
                     help="draft weight width (default: config knob, else "
                          "one Table 3 step below weight_bits)")
+    ap.add_argument("--paged", action="store_true",
+                    help="page the KV cache: per-request page tables "
+                         "over a shared KVPagePool instead of one dense "
+                         "max-seq-len region per slot")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="KV rows per page (must divide --max-seq-len)")
+    ap.add_argument("--kv-pool-pages", type=int, default=None,
+                    help="physical pool pages (default: slots x "
+                         "pages/sequence; smaller over-commits slots "
+                         "against the pool)")
     ap.add_argument("--pack-weights", action="store_true",
                     help="pack target weights at the planned width")
     ap.add_argument("--adaptive", action="store_true",
@@ -100,16 +115,19 @@ def main() -> None:
         plan.save(args.save_plan)
         print(f"wrote plan to {args.save_plan}")
 
+    paged_kw = dict(paged=args.paged, kv_page_size=args.kv_page_size,
+                    kv_pool_pages=args.kv_pool_pages)
     if args.speculative:
         eng = SpeculativeEngine(
             cfg, max_seq_len=args.max_seq_len,
             max_slots=args.slots or 4, k=args.speculative,
             draft_bits=args.draft_bits, pack_weights=args.pack_weights,
-            plan=plan, adaptive=args.adaptive)
+            plan=plan, adaptive=args.adaptive, **paged_kw)
     else:
         eng = ServeEngine(cfg, max_seq_len=args.max_seq_len,
                           max_slots=args.slots or 4,
-                          pack_weights=args.pack_weights, plan=plan)
+                          pack_weights=args.pack_weights, plan=plan,
+                          **paged_kw)
     rng = np.random.default_rng(0)
     rids = [
         eng.submit(list(rng.integers(1, cfg.vocab_size, 4)),
@@ -123,6 +141,12 @@ def main() -> None:
           f"slots={stats['slots']}; "
           f"planner max sequences (full-scale)="
           f"{stats['residency_max_sequences']}")
+    if args.paged:
+        print(f"paged: page_size={stats['kv_page_size']} "
+              f"pool_pages={stats['kv_pool_pages']} "
+              f"pool_peak_utilization="
+              f"{stats['pool_peak_utilization']:.2f} "
+              f"prefix_hit_rate={stats['prefix_hit_rate']:.2f}")
     if args.speculative:
         print(f"speculative: k={stats['k']} draft_bits={stats['draft_bits']} "
               f"acceptance={stats['acceptance_rate']:.3f} "

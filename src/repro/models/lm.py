@@ -17,8 +17,12 @@ Public surface (used by train/serve/dryrun):
   * ``prefill_step(params, state, tokens, n_valid)`` -> state — chunked
     prompt ingestion through the decode KV-append path
   * ``rollback_decode_state(state, lengths)`` -> state — roll the KV back
-    to per-sequence lengths (speculation rejects)
+    to per-sequence lengths (speculation rejects; in paged mode the
+    serving layer then frees the pages past the committed length)
   * ``init_decode_state(batch, seq_len)``  -> zeroed state (donated arg)
+  * ``init_paged_decode_state(batch, seq_len, page_size, n_pages)`` ->
+    pooled-page state (physical page pool + per-sequence page tables;
+    bitwise-identical decode to the dense layout)
   * ``input_specs(shape)``    -> ShapeDtypeStructs for the dry-run
 """
 from __future__ import annotations
@@ -46,6 +50,51 @@ def _stack_init(init_fn, rng, n, *args):
 
 def _packed_kv_words(d: int, bits: int) -> int:
     return bitpack.packed_group_words(d, bits)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV: page-table indirection over a pooled physical cache
+# ---------------------------------------------------------------------------
+
+def gather_kv_pages(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize a per-sequence cache view from the page pool.
+
+    pool: (P, page, Hkv, W) one layer's physical pages (page 0 = scrap);
+    table: (B, max_pages) int32 physical page ids (0 where unallocated).
+    Returns (B, max_pages*page, Hkv, W) — logical row ``p`` of sequence
+    ``b`` is pool row (table[b, p // page], p % page). Rows gathered
+    through unallocated (scrap) entries are garbage, but they only ever
+    sit at positions >= the sequence's valid length, where attention
+    masks them — the same dead-row contract the dense cache relies on.
+    """
+    g = jnp.take(pool, table, axis=0)          # (B, mp, page, Hkv, W)
+    b, mp, pg = g.shape[0], g.shape[1], g.shape[2]
+    return g.reshape((b, mp * pg) + g.shape[3:])
+
+
+def scatter_kv_row(pool: jnp.ndarray, view: jnp.ndarray,
+                   table: jnp.ndarray, lens: jnp.ndarray) -> jnp.ndarray:
+    """Persist the row appended at position ``lens[b]`` back to the pool.
+
+    ``view`` is the gathered (B, S, Hkv, W) cache *after* the append path
+    wrote one token's row at each sequence's length; everything below
+    ``lens`` is already pool-resident, so only that single row needs to
+    reach the physical page. Out-of-range lengths (a free slot whose
+    length kept advancing) clamp onto the scrap page, mirroring the dense
+    cache's clamp-at-the-last-row behaviour for dead slots.
+    """
+    page = pool.shape[1]
+    mp = table.shape[1]
+    pos = jnp.minimum(lens, view.shape[1] - 1)
+    row = jax.vmap(
+        lambda v, p: jax.lax.dynamic_slice_in_dim(v, p, 1, 0)[0]
+    )(view, pos)                                # (B, Hkv, W)
+    pidx = jnp.minimum(pos // page, mp - 1)
+    ids = jnp.take_along_axis(table, pidx[:, None], axis=1)[:, 0]
+    phys = ids * page + pos % page
+    flat = pool.reshape((-1,) + pool.shape[2:])
+    flat = flat.at[phys].set(row.astype(flat.dtype))
+    return flat.reshape(pool.shape)
 
 
 @dataclasses.dataclass
@@ -357,25 +406,121 @@ class LM:
             state["clen"] = mk((batch_size,), jnp.int32)
         return state
 
+    def init_paged_decode_state(self, batch_size: int, seq_len: int,
+                                page_size: int, n_pages: int,
+                                abstract: bool = False) -> Dict:
+        """Paged twin of :meth:`init_decode_state`: the KV cache is a
+        pool of ``n_pages`` physical pages (plus the scrap page 0) shared
+        by all sequences, plus a per-sequence page table. Every page
+        holds ``page_size`` whole rows, each packed exactly as the dense
+        cache packs them (the group-of-32 word layout along head_dim), so
+        any gathered run of pages stays fused-decodable by
+        ``kernels.kv_decode``. ``page_size`` must divide ``seq_len`` so
+        the gathered view has the dense cache's exact shape — which is
+        what makes paged decode bitwise identical to dense decode.
+
+        Only KV-row families page; recurrent state (ssm / hybrid) is
+        O(1) per sequence and has no rows to pool."""
+        cfg = self.cfg
+        if not self.supports_rollback:
+            raise ValueError(
+                f"family {cfg.family!r} carries recurrent decode state; "
+                "paged KV needs a row-addressable cache (use dense mode)"
+            )
+        if seq_len % page_size:
+            raise ValueError(
+                f"kv_page_size {page_size} must divide max_seq_len "
+                f"{seq_len} so gathered pages keep the dense cache shape"
+            )
+        max_pages = seq_len // page_size
+        kv_bits = cfg.compression.kv_bits
+        hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+        dt = cfg.dtype
+        mk = (jax.ShapeDtypeStruct if abstract
+              else (lambda sh, d: jnp.zeros(sh, d)))
+
+        def kv_pool(layers):
+            p1 = n_pages + 1                      # + scrap page 0
+            if kv_bits:
+                w = _packed_kv_words(hd, kv_bits)
+                return {
+                    "k": mk((layers, p1, page_size, hkv, w), jnp.uint32),
+                    "v": mk((layers, p1, page_size, hkv, w), jnp.uint32),
+                }
+            return {
+                "k": mk((layers, p1, page_size, hkv, hd), dt),
+                "v": mk((layers, p1, page_size, hkv, hd), dt),
+            }
+
+        state: Dict[str, Any] = {
+            "len": mk((batch_size,), jnp.int32),
+            "table": mk((batch_size, max_pages), jnp.int32),
+            "kv": kv_pool(cfg.n_layers),
+        }
+        if cfg.family == "encdec":
+            # the cross cache is prompt-scoped and fixed-length — per-slot
+            # dense regions are already exactly sized, so it stays dense
+            if kv_bits:
+                w = _packed_kv_words(hd, kv_bits)
+                state["cross"] = {
+                    "ck": mk((cfg.n_layers, batch_size, cfg.encoder_seq,
+                              hkv, w), jnp.uint32),
+                    "cv": mk((cfg.n_layers, batch_size, cfg.encoder_seq,
+                              hkv, w), jnp.uint32),
+                }
+            else:
+                state["cross"] = {
+                    "ck": mk((cfg.n_layers, batch_size, cfg.encoder_seq,
+                              hkv, hd), dt),
+                    "cv": mk((cfg.n_layers, batch_size, cfg.encoder_seq,
+                              hkv, hd), dt),
+                }
+            state["clen"] = mk((batch_size,), jnp.int32)
+        return state
+
     def decode_step(self, params, state: Dict,
                     tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
-        """tokens: (B, 1) -> (logits (B, 1, V), updated state)."""
+        """tokens: (B, 1) -> (logits (B, 1, V), updated state).
+
+        Accepts both decode-state layouts: the dense per-slot cache of
+        :meth:`init_decode_state` and the paged pool + page table of
+        :meth:`init_paged_decode_state` (detected by the ``table`` key).
+        The paged path gathers each layer's pages into the dense view,
+        runs the identical attention/append program on it, then persists
+        only the appended row back to its physical page — so the two
+        layouts are bitwise-identical in outputs."""
         cfg = self.cfg
         fam = cfg.family
+        table = state.get("table")
         x = L.embed(tokens, params["embed"]).astype(cfg.dtype)
         x = constrain(x, ("data", None, None))
         positions = state["len"][:, None]
 
+        def kv_view(kv):
+            if table is None:
+                return kv["k"], kv["v"]
+            return (gather_kv_pages(kv["k"], table),
+                    gather_kv_pages(kv["v"], table))
+
+        def kv_persist(kv, st):
+            if table is None:
+                return {"k": st["k"], "v": st["v"]}
+            return {
+                "k": scatter_kv_row(kv["k"], st["k"], table, state["len"]),
+                "v": scatter_kv_row(kv["v"], st["v"], table, state["len"]),
+            }
+
         if fam in ("dense", "vlm", "moe"):
             def body(h, xs):
                 lp, kv = xs
-                st = {"k": kv["k"], "v": kv["v"], "len": state["len"]}
+                kc, vc = kv_view(kv)
+                st = {"k": kc, "v": vc, "len": state["len"]}
                 h, st = B.attention_decode(lp["attn"], h, cfg, st, positions)
                 if fam == "moe":
                     h = B.moe_apply(lp["moe"], h, cfg)
                 else:
                     h = B.mlp_apply(lp["mlp"], h, cfg)
-                return h, {"k": st["k"], "v": st["v"]}
+                return h, kv_persist(kv, st)
             x, new_kv = jax.lax.scan(body, x,
                                      (params["blocks"], state["kv"]))
             state = dict(state, kv=new_kv)
@@ -431,14 +576,15 @@ class LM:
         elif fam == "encdec":
             def body(h, xs):
                 lp, kv, cross = xs
-                st = {"k": kv["k"], "v": kv["v"], "len": state["len"]}
+                kc, vc = kv_view(kv)
+                st = {"k": kc, "v": vc, "len": state["len"]}
                 h, st = B.attention_decode(lp["self"], h, cfg, st, positions)
                 cst = {"ck": cross["ck"], "cv": cross["cv"],
                        "clen": state["clen"]}
                 h, _ = B.attention_decode(lp["cross"], h, cfg, cst,
                                           positions, cross=True)
                 h = B.mlp_apply(lp["mlp"], h, cfg)
-                return h, {"k": st["k"], "v": st["v"]}
+                return h, kv_persist(kv, st)
             x, new_kv = jax.lax.scan(
                 body, x, (params["blocks"], state["kv"], state["cross"]))
             state = dict(state, kv=new_kv)

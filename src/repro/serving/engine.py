@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import jit, prng_fold_in, prng_key
+from repro.core.allocator import KVPagePool, PoolExhausted
 from repro.core.compress import repack, uniform_plan
 from repro.core.occupancy import TPU_V5E, TPUChipConfig, decode_residency
 from repro.core.tensor_store import tree_bytes
@@ -72,6 +73,16 @@ class Request:
     # speculative per-request acceptance stats (0/0 on the plain engine)
     draft_proposed: int = 0
     draft_accepted: int = 0
+    # paged-KV bookkeeping (all zero in dense mode)
+    kv_len: int = 0          # host mirror of the device cache length
+    n_pages: int = 0         # page-table entries currently held
+    reserved_pages: int = 0  # promised-but-unallocated pool pages
+    shared_pages: int = 0    # prefix pages retained from the registry
+    pages_peak: int = 0      # max pages held: the actual-length footprint
+    prefix_keys: List[bytes] = dataclasses.field(default_factory=list)
+    # shareable pages this request writes itself: published to the
+    # registry only once prefill has actually filled them
+    deferred_register: List[Any] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -91,6 +102,16 @@ class ServeEngine:
     # config width would otherwise pin, so every leaf packs at its tuned
     # width and draft derivation steps each leaf individually
     plan: Optional[Any] = None
+    # paged KV mode: the cache becomes a block-granular page pool shared
+    # by all slots (core.allocator.KVPagePool) with per-request page
+    # tables — per-request KV bytes scale with *actual* length instead of
+    # slots x max_seq_len, admission over-commits slots against the pool,
+    # and identical prompt prefixes share refcounted pages
+    paged: bool = False
+    kv_page_size: int = 16         # rows per page (must divide max_seq_len)
+    kv_pool_pages: Optional[int] = None  # None: slots x pages/seq (no
+    #                                      over-commit); smaller values
+    #                                      over-commit slots vs. the pool
 
     def __post_init__(self):
         self.lm = LM(self.cfg)
@@ -114,8 +135,33 @@ class ServeEngine:
         )
         self.residency = plan
         self.n_slots = self.max_slots or max(min(plan.max_sequences, 64), 1)
-        self.state = self.lm.init_decode_state(self.n_slots,
-                                               self.max_seq_len)
+        self.pool: Optional[KVPagePool] = None
+        if self.paged:
+            if not self.lm.supports_rollback:
+                raise ValueError(
+                    f"family {self.cfg.family!r} keeps recurrent O(1) "
+                    "decode state — there are no KV rows to page; serve "
+                    "it in dense KV mode (paged KV mode refused)"
+                )
+            if self.max_seq_len % self.kv_page_size:
+                raise ValueError(
+                    f"kv_page_size {self.kv_page_size} must divide "
+                    f"max_seq_len {self.max_seq_len} (paged KV mode)"
+                )
+            self._max_pages = self.max_seq_len // self.kv_page_size
+            if self.kv_pool_pages is None:
+                self.kv_pool_pages = self.n_slots * self._max_pages
+            self.pool = KVPagePool(self.kv_pool_pages, self.kv_page_size)
+            # host-side page tables (0 = scrap); pushed to device before
+            # every jitted call because donation consumes the device copy
+            self._table = np.zeros((self.n_slots, self._max_pages),
+                                   np.int32)
+            self.state = self.lm.init_paged_decode_state(
+                self.n_slots, self.max_seq_len, self.kv_page_size,
+                self.kv_pool_pages)
+        else:
+            self.state = self.lm.init_decode_state(self.n_slots,
+                                                   self.max_seq_len)
         if self.cfg.family == "encdec":
             self.state["clen"] = jnp.full((self.n_slots,),
                                           self.cfg.encoder_seq, jnp.int32)
@@ -172,10 +218,13 @@ class ServeEngine:
         need = (max(len(prompt), 1) + max_new_tokens - 1
                 + self._seq_headroom)
         if self.lm.supports_rollback and need > self.max_seq_len:
+            mode = ("paged KV mode: page table holds "
+                    f"{self._max_pages} pages of {self.kv_page_size}"
+                    if self.paged else "dense KV mode")
             raise ValueError(
                 f"request needs {need} KV rows (prompt {len(prompt)} + "
                 f"{max_new_tokens} new + headroom {self._seq_headroom}) "
-                f"but max_seq_len is {self.max_seq_len}"
+                f"but max_seq_len is {self.max_seq_len} [{mode}]"
             )
         rid = self._next_rid
         self._next_rid += 1
@@ -194,19 +243,36 @@ class ServeEngine:
         return (self.n_slots - len(self._free)) / self.n_slots
 
     @property
+    def pool_utilization(self) -> float:
+        """Pages used / pool pages (0.0 in dense mode)."""
+        return self.pool.utilization if self.pool is not None else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Prefix-page registry hit rate across admissions (0.0 dense)."""
+        return self.pool.prefix_hit_rate if self.pool is not None else 0.0
+
+    @property
     def weight_read_bytes(self) -> int:
         """Bytes one full weight pass streams (packed where packed)."""
         return tree_bytes(self.params)[0]
 
     # -- scheduler ------------------------------------------------------------
+    def _set_slot_len(self, slot: int, n: int) -> None:
+        """Set one slot's device cache length. Overridable — the
+        speculative engine keeps its draft cache in lockstep."""
+        self.state["len"] = self.state["len"].at[slot].set(n)
+
     def _reset_slot(self, slot: int) -> None:
-        """Recycle a slot: zero its cache length (rows past len are dead).
-        Overridable — the speculative engine resets its draft cache too."""
-        self.state["len"] = self.state["len"].at[slot].set(0)
+        """Recycle a slot: zero its cache length (rows past len are
+        dead)."""
+        self._set_slot_len(slot, 0)
 
     def _admit(self) -> None:
         admitted = False
         while self._queue and self._free:
+            if self.paged and not self._try_reserve(self._queue[0]):
+                break   # pool-aware headroom: the head waits for pages
             req = self._queue.popleft()
             slot = self._free.popleft()
             req.slot = slot
@@ -217,13 +283,188 @@ class ServeEngine:
             # token — without it the first tick would replay whatever
             # value the slot's previous occupant left in _last_tokens.
             self._reset_slot(slot)
-            self._pending_prefill[req.rid] = (
-                list(req.prompt) or [self.bos_token])
+            pending = list(req.prompt) or [self.bos_token]
+            if self.paged:
+                pending = self._attach_pages(req, pending)
+            self._pending_prefill[req.rid] = pending
         # chunked ingestion needs the rollback property (padding rows must
         # be dead rows); recurrent families fold every fed token into O(1)
         # state, so they keep the token-by-token replay in _generate.
         if admitted and self.lm.supports_rollback:
             self._ingest_prompts()
+
+    # -- paged-KV page management ---------------------------------------------
+    def _try_reserve(self, req: Request) -> bool:
+        """Admission headroom check against the *pool*, not max_seq_len:
+        reserve exactly the pages this request's own worst case needs
+        (prompt + max_new - 1 + speculation headroom rows), minus any
+        prompt-prefix pages already resident in the registry. Slots
+        over-commit against the pool whenever requests are shorter than
+        max_seq_len — the capacity the dense layout strands."""
+        pending = list(req.prompt) or [self.bos_token]
+        need = len(pending) + req.max_new_tokens - 1 + self._seq_headroom
+        pages_needed = -(-need // self.kv_page_size)
+        # full pages strictly below the held-back last prompt token are
+        # shareable; probe the chain left-to-right (a miss ends it)
+        shareable = (len(pending) - 1) // self.kv_page_size
+        keys: List[bytes] = []
+        parent: Optional[bytes] = None
+        for i in range(shareable):
+            toks = pending[i * self.kv_page_size:
+                           (i + 1) * self.kv_page_size]
+            parent = KVPagePool.chain_key(parent, toks)
+            keys.append(parent)
+        matched = 0
+        for key in keys:
+            if self.pool.lookup(key) is None:
+                break
+            matched += 1
+        reservation = pages_needed - matched
+        if not self.pool.can_reserve(reservation):
+            return False
+        self.pool.reserve(reservation)
+        req.reserved_pages = reservation
+        req.shared_pages = matched
+        req.prefix_keys = keys
+        return True
+
+    def _attach_pages(self, req: Request, pending: List[int]) -> List[int]:
+        """Wire the admitted request's page table: retain matched prefix
+        pages (their KV rows are already resident — those prompt tokens
+        skip prefill entirely), then allocate the remaining shareable
+        pages. Those only *publish* to the registry once prefill has
+        actually written them (``_flush_registrations``) — a key in the
+        registry is a promise that the rows exist, and a sharer admitted
+        in the same batch would otherwise attend over unwritten pages.
+        Pages past the shareable prefix allocate lazily as the sequence
+        grows (``_ensure_rows``)."""
+        slot, pool = req.slot, self.pool
+        for i, key in enumerate(req.prefix_keys):
+            if i < req.shared_pages:
+                page = pool.lookup(key)
+                pool.prefix_queries -= 1   # re-probe, not a new query
+                pool.prefix_hits -= 1
+                pool.retain(page)
+            else:
+                page = pool.alloc(reserved=True)
+                req.reserved_pages -= 1
+                req.deferred_register.append((i, key))
+            self._table[slot, i] = page
+            req.n_pages += 1
+        req.pages_peak = max(req.pages_peak, req.n_pages)
+        skip = req.shared_pages * self.kv_page_size
+        if skip:
+            req.kv_len = skip
+            self._set_slot_len(slot, skip)
+        return pending[skip:]
+
+    def _alloc_page(self, req: Request) -> int:
+        """One page for ``req`` — reserved bucket first, free bucket as
+        the (copy-on-write) fallback."""
+        if req.reserved_pages > 0:
+            page = self.pool.alloc(reserved=True)
+            req.reserved_pages -= 1
+            return page
+        try:
+            return self.pool.alloc()
+        except PoolExhausted as e:
+            raise PoolExhausted(
+                f"{e} [paged KV mode: request {req.rid} needs a page "
+                "beyond its admission reservation]") from e
+
+    def _ensure_rows(self, req: Request, rows: int) -> None:
+        """Grow the request's page table to cover ``rows`` cache rows
+        before a jitted call appends them (writes through unallocated
+        table entries land on the scrap page — harmless, but real rows
+        must land on owned pages)."""
+        needed = min(-(-rows // self.kv_page_size), self._max_pages)
+        self._ensure_tail_private(req)
+        while req.n_pages < needed:
+            page = self._alloc_page(req)
+            self._table[req.slot, req.n_pages] = page
+            req.n_pages += 1
+        req.pages_peak = max(req.pages_peak, req.n_pages)
+
+    def _ensure_tail_private(self, req: Request) -> None:
+        """Copy-on-write at the first divergent page: if the page about
+        to receive this request's next append is shared (refcount > 1),
+        give the request a private copy first. Full-page-only sharing
+        means organic traffic appends past every shared page, but a
+        defensive check keeps the invariant local and testable."""
+        idx = req.kv_len // self.kv_page_size
+        if idx >= req.n_pages:
+            return
+        if idx < len(req.prefix_keys):
+            # registered prefix region: content is fully determined by the
+            # prompt tokens hashed into the key, so the registering writer
+            # filling it during prefill is what sharers *expect* — copying
+            # here would strand them on a half-written original
+            return
+        page = int(self._table[req.slot, idx])
+        if self.pool.refcount(page) <= 1:
+            return
+        fresh = self._alloc_page(req)
+        self._copy_page(page, fresh)
+        self._table[req.slot, idx] = fresh
+        self.pool.free(page)               # drop our share of the original
+        if idx < req.shared_pages:
+            req.shared_pages = idx
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Device-side copy of one physical page (all layers, K and V).
+        Overridable — the speculative engine mirrors into its draft
+        pool."""
+        for name in ("k", "v"):
+            buf = self.state["kv"][name]
+            self.state["kv"][name] = buf.at[:, dst].set(buf[:, src])
+
+    def _trim_pages(self, req: Request) -> None:
+        """Free pages past the committed length (speculation rolled the
+        cache back). Each freed page's capacity swaps back into the
+        request's reservation, so pool *usage* tracks committed rows
+        while the admission guarantee holds."""
+        keep = max(-(-req.kv_len // self.kv_page_size), 1)
+        while req.n_pages > keep:
+            req.n_pages -= 1
+            page = int(self._table[req.slot, req.n_pages])
+            self._table[req.slot, req.n_pages] = 0
+            sole = self.pool.refcount(page) == 1
+            self.pool.free(page)
+            if sole:
+                self.pool.reserve(1)
+                req.reserved_pages += 1
+
+    def _flush_registrations(self, req: Request) -> None:
+        """Publish shareable pages whose rows prefill has now written
+        (``kv_len`` crossed their boundary). A racing writer of the same
+        prefix in the same batch registers first; the loser's pages just
+        stay private."""
+        while req.deferred_register:
+            i, key = req.deferred_register[0]
+            if (i + 1) * self.kv_page_size > req.kv_len:
+                return
+            req.deferred_register.pop(0)
+            if not self.pool.is_registered(key):
+                self.pool.register(key, int(self._table[req.slot, i]))
+
+    def _release_pages(self, req: Request) -> None:
+        """Eviction at finish: drop every held page (shared pages just
+        lose one holder; a last holder returns the page — and its
+        prefix-registry entry — to the pool) plus any unused
+        reservation."""
+        for i in range(req.n_pages):
+            self.pool.free(int(self._table[req.slot, i]))
+        self._table[req.slot, :] = 0
+        req.n_pages = 0
+        req.deferred_register.clear()      # unpublished keys die with us
+        self.pool.release(req.reserved_pages)
+        req.reserved_pages = 0
+
+    def _push_tables(self) -> None:
+        """Upload the host page table before a jitted call (donation
+        consumed the previous device copy). Overridable — the
+        speculative engine pushes the same table into its draft state."""
+        self.state["table"] = jnp.asarray(self._table)
 
     def _ingest_prompts(self) -> None:
         """Stream pending prompts through ``lm.prefill_step`` in chunks of
@@ -253,11 +494,17 @@ class ServeEngine:
             tokens = np.zeros((self.n_slots, chunk), np.int32)
             n_valid = np.zeros((self.n_slots,), np.int32)
             for rid, toks in pending.items():
-                slot = self._active[rid].slot
+                req = self._active[rid]
                 take = min(chunk, len(toks) - 1)
-                tokens[slot, :take] = toks[:take]
-                n_valid[slot] = take
+                tokens[req.slot, :take] = toks[:take]
+                n_valid[req.slot] = take
                 del toks[:take]
+                if self.paged:
+                    self._ensure_rows(req, req.kv_len + take)
+                    req.kv_len += take
+                    self._flush_registrations(req)
+            if self.paged:
+                self._push_tables()
             self._prefill_call(jnp.asarray(tokens), jnp.asarray(n_valid))
 
     def _prefill_call(self, tokens: jnp.ndarray,
@@ -288,8 +535,16 @@ class ServeEngine:
             pend = self._pending_prefill.get(req.rid)
             if pend:
                 tokens[req.slot, 0] = pend.pop(0)
+        if self.paged:
+            # every resident slot appends one row this tick
+            for req in self._active.values():
+                self._ensure_rows(req, req.kv_len + 1)
+            self._push_tables()
         toks = jnp.asarray(tokens)
         logits, self.state = self._step(self.params, self.state, toks)
+        if self.paged:
+            for req in self._active.values():
+                req.kv_len = min(req.kv_len + 1, self.max_seq_len)
         nxt = (jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
                if self.greedy else self._sample_tokens(logits[:, 0, :]))
         nxt = np.asarray(nxt)
@@ -322,7 +577,9 @@ class ServeEngine:
         for rid in finished:               # evict: _active stays bounded
             req = self._active.pop(rid)
             self._results[rid] = req.output
-            self._free.append(req.slot)    # slot recycled: occupancy win
+            if self.paged:
+                self._release_pages(req)   # pages back to the pool first,
+            self._free.append(req.slot)    # then the slot: occupancy win
             self._pending_prefill.pop(rid, None)
         while len(self._results) > self.max_results:
             self._results.pop(next(iter(self._results)))
@@ -336,11 +593,23 @@ class ServeEngine:
         while (self._queue or self._active) and self.ticks < max_ticks:
             self.step()
         dt = time.perf_counter() - t0
-        return {
+        stats: Dict[str, Any] = {
             "ticks": self.ticks,
             "tokens": self.tokens_out,
             "wall_s": dt,
             "slots": self.n_slots,
+            "slot_occupancy": self.occupancy,
             "residency_max_sequences": self.residency.max_sequences,
             "arithmetic_intensity": self.residency.arithmetic_intensity,
         }
+        if self.pool is not None:
+            stats.update({
+                "kv_page_size": self.kv_page_size,
+                "kv_pool_pages": self.kv_pool_pages,
+                "pool_utilization": self.pool.utilization,
+                "pool_peak_utilization": self.pool.peak_utilization,
+                "prefix_hit_rate": self.pool.prefix_hit_rate,
+                "prefix_hits": self.pool.prefix_hits,
+                "prefix_queries": self.pool.prefix_queries,
+            })
+        return stats

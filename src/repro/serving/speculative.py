@@ -158,9 +158,10 @@ class SpeculativeEngine(ServeEngine):
         if self.k < 1:
             raise ValueError(f"k must be >= 1, got {self.k}")
         if not self.lm.supports_rollback:
+            mode = "paged KV mode" if self.paged else "dense KV mode"
             raise ValueError(
                 f"family {self.cfg.family!r} cannot roll its decode state "
-                "back; speculation needs KV-length rollback"
+                f"back; speculation needs KV-length rollback [{mode}]"
             )
         wbits = self.cfg.resolved_weight_bits
         dbits = self.draft_bits or resolve_draft_bits(self.cfg)
@@ -204,8 +205,16 @@ class SpeculativeEngine(ServeEngine):
             self.cfg, compression=dataclasses.replace(
                 self.cfg.compression, kv_bits=self.draft_kv_bits))
         self.draft_lm = LM(self.draft_cfg)
-        self.draft_state = self.draft_lm.init_decode_state(
-            self.n_slots, self.max_seq_len)
+        if self.paged:
+            # the draft's paged pool mirrors the target's: same page ids,
+            # same per-slot table, its own (narrower) physical buffers —
+            # one KVPagePool allocator governs both
+            self.draft_state = self.draft_lm.init_paged_decode_state(
+                self.n_slots, self.max_seq_len, self.kv_page_size,
+                self.kv_pool_pages)
+        else:
+            self.draft_state = self.draft_lm.init_decode_state(
+                self.n_slots, self.max_seq_len)
         if self.cfg.family == "encdec":
             self.draft_state["clen"] = jnp.full(
                 (self.n_slots,), self.cfg.encoder_seq, jnp.int32)
@@ -277,6 +286,13 @@ class SpeculativeEngine(ServeEngine):
                 # chunked ingestion left exactly one token: the slot's
                 # first real input. It feeds both models this tick.
                 tokens[req.slot, 0] = pend.pop(0)
+        if self.paged:
+            # peak rows this tick: k+1 appends (draft and target alike)
+            # from the committed length, before the roll-back
+            for req in self._active.values():
+                self._ensure_rows(req, min(req.kv_len + self.k + 1,
+                                           self.max_seq_len))
+            self._push_tables()
         t0 = jnp.asarray(tokens)
         len0 = np.asarray(self.state["len"]).astype(np.int64)
         dlen0 = np.asarray(self.draft_state["len"]).astype(np.int64)
@@ -321,6 +337,13 @@ class SpeculativeEngine(ServeEngine):
             self.state, len0 + commits)
         self.draft_state = self.draft_lm.rollback_decode_state(
             self.draft_state, dlen0 + commits)
+        if self.paged:
+            # speculated rows past the committed length are dead again:
+            # return their tail pages to the reservation bucket
+            for req in self._active.values():
+                req.kv_len = min(req.kv_len + int(commits[req.slot]),
+                                 self.max_seq_len)
+                self._trim_pages(req)
         self._last_tokens = jnp.asarray(last)
         self.spec_ticks += 1
         if self.adaptive:
@@ -457,9 +480,19 @@ class SpeculativeEngine(ServeEngine):
         self.draft_state = self._draft_prefill(
             self.draft_params, self.draft_state, tokens, n_valid)
 
-    def _reset_slot(self, slot: int) -> None:
-        super()._reset_slot(slot)         # draft cache length resets too
-        self.draft_state["len"] = self.draft_state["len"].at[slot].set(0)
+    def _set_slot_len(self, slot: int, n: int) -> None:
+        super()._set_slot_len(slot, n)    # draft cache length in lockstep
+        self.draft_state["len"] = self.draft_state["len"].at[slot].set(n)
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        super()._copy_page(src, dst)      # COW mirrors into the draft pool
+        for name in ("k", "v"):
+            buf = self.draft_state["kv"][name]
+            self.draft_state["kv"][name] = buf.at[:, dst].set(buf[:, src])
+
+    def _push_tables(self) -> None:
+        super()._push_tables()            # one table drives both pools
+        self.draft_state["table"] = jnp.asarray(self._table)
 
     # -- stats ----------------------------------------------------------------
     @property

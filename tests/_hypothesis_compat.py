@@ -116,6 +116,13 @@ except ImportError:
                 sample, f"lists({elements!r}, {min_size}..{max_size})")
 
         @staticmethod
+        def tuples(*strategies):
+            def sample(rng):
+                return tuple(s.sample(rng) for s in strategies)
+
+            return _Strategy(sample, f"tuples({strategies!r})")
+
+        @staticmethod
         def booleans():
             return _Strategy(lambda rng: bool(rng.integers(0, 2)),
                              "booleans()")

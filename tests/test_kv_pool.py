@@ -1,0 +1,200 @@
+"""KVPagePool bookkeeping + SliceAllocator expiry/grab edge cases.
+
+The pool lifts the slice allocator's discipline (fixed physical file,
+lowest-free-first grab, expiry-driven reclaim) to serving KV pages, so
+both sides get property tests here: the pool's refcount/reservation/
+registry invariants under random op sequences, and the allocator edge
+cases the pool's discipline inherits (expire-at-boundary reuse,
+fragmentation after mixed-width frees)."""
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.allocator import (
+    KVPagePool,
+    Operand,
+    PoolExhausted,
+    SliceAllocator,
+)
+from repro.core.formats import SLICES_PER_REGISTER
+
+
+# -- pool basics --------------------------------------------------------------
+
+def test_pool_allocates_lowest_first_and_reserves_scrap():
+    pool = KVPagePool(4, 16)
+    assert [pool.alloc() for _ in range(4)] == [1, 2, 3, 4]  # 0 is scrap
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    pool.free(2)
+    pool.free(1)
+    # freed pages recycle FIFO — the grab order stays deterministic
+    assert pool.alloc() == 2
+    assert pool.alloc() == 1
+
+
+def test_pool_double_free_raises():
+    pool = KVPagePool(2, 16)
+    p = pool.alloc()
+    pool.free(p)
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(p)
+    with pytest.raises(ValueError):
+        pool.free(99)                      # never-allocated id
+
+
+def test_pool_refcount_lifecycle():
+    pool = KVPagePool(2, 16)
+    p = pool.alloc()
+    pool.retain(p)
+    assert pool.refcount(p) == 2
+    pool.free(p)                           # one holder left: still used
+    assert pool.refcount(p) == 1 and pool.used == 1
+    pool.free(p)                           # last holder: back to the pool
+    assert pool.refcount(p) == 0 and pool.used == 0
+    with pytest.raises(ValueError):
+        pool.retain(p)                     # retain needs an allocated page
+
+
+def test_pool_reservation_accounting():
+    pool = KVPagePool(4, 16)
+    pool.reserve(3)
+    assert (pool.used, pool.reserved, pool.free_pages) == (0, 3, 1)
+    # the unpromised bucket protects reservations from plain allocs
+    assert pool.alloc() == 1
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    # but reserved allocs draw the promise down
+    assert pool.alloc(reserved=True) == 2
+    assert (pool.used, pool.reserved, pool.free_pages) == (2, 2, 0)
+    pool.release(2)
+    assert pool.free_pages == 2
+    with pytest.raises(ValueError):
+        pool.release(1)                    # nothing left to release
+    with pytest.raises(PoolExhausted):
+        pool.reserve(3)
+    assert not pool.can_reserve(3) and pool.can_reserve(2)
+
+
+def test_pool_alloc_reserved_without_reservation_raises():
+    pool = KVPagePool(2, 16)
+    with pytest.raises(ValueError, match="without reservation"):
+        pool.alloc(reserved=True)
+
+
+def test_prefix_registry_shares_and_evicts_with_last_holder():
+    pool = KVPagePool(4, 4)
+    key = KVPagePool.chain_key(None, [1, 2, 3, 4])
+    assert pool.lookup(key) is None        # miss counts as a query
+    page = pool.alloc()
+    pool.register(key, page)
+    assert pool.lookup(key) == page
+    assert (pool.prefix_hits, pool.prefix_queries) == (1, 2)
+    assert pool.prefix_hit_rate == 0.5
+    pool.retain(page)                      # a sharer joins
+    pool.free(page)                        # sharer leaves: entry survives
+    assert pool.lookup(key) == page
+    pool.free(page)                        # last holder: entry evicted
+    assert pool.lookup(key) is None
+    with pytest.raises(ValueError):
+        pool.register(key, page)           # page no longer allocated
+
+
+def test_chain_key_is_positional_and_chained():
+    a = KVPagePool.chain_key(None, [1, 2])
+    assert a == KVPagePool.chain_key(None, [1, 2])
+    assert a != KVPagePool.chain_key(None, [2, 1])
+    # same tokens under different parents are different pages
+    assert KVPagePool.chain_key(a, [3, 4]) != KVPagePool.chain_key(
+        None, [3, 4])
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.sampled_from(["alloc", "free", "reserve", "alloc_r",
+                                 "release", "retain"]),
+                min_size=1, max_size=80))
+def test_pool_invariants_under_random_ops(ops):
+    """used + free-list == n_pages and reserved <= free-list, no matter
+    the op order; every page id handed out is unique while held."""
+    pool = KVPagePool(6, 8)
+    held = []
+    for op in ops:
+        try:
+            if op == "alloc":
+                held.append(pool.alloc())
+            elif op == "alloc_r":
+                held.append(pool.alloc(reserved=True))
+            elif op == "free" and held:
+                pool.free(held.pop())
+            elif op == "reserve":
+                pool.reserve(1)
+            elif op == "release":
+                pool.release(1)
+            elif op == "retain" and held:
+                pool.retain(held[-1])
+                held.append(held[-1])
+        except (PoolExhausted, ValueError):
+            pass                           # over-ask is rejected, not UB
+        assert pool.used + len(pool._free) == pool.n_pages
+        assert 0 <= pool.reserved <= len(pool._free)
+        assert pool.free_pages == pool.n_pages - pool.used - pool.reserved
+        assert 0 not in pool._refcount     # scrap page never handed out
+        assert pool.peak_used >= pool.used
+    for page in set(held):
+        assert pool.refcount(page) == held.count(page)
+
+
+# -- allocator expiry/grab edge cases the pool discipline inherits ------------
+
+def test_expire_at_boundary_reuses_register():
+    """An operand ending exactly where the next starts (end == start) is
+    dead at that program point — its register must be reclaimed, not
+    leaked into pressure."""
+    ops = [Operand(name=f"v{i}", bits=32, start=i, end=i + 1)
+           for i in range(6)]
+    alloc = SliceAllocator().allocate(ops)
+    assert alloc.register_pressure == 1
+    assert alloc.baseline_pressure == 1
+
+
+def test_partial_expiry_reclaims_slices_not_register():
+    """When one co-resident dies and another survives, the dead slices
+    return to the free mask and the next operand packs into them."""
+    ops = [
+        Operand(name="long", bits=16, start=0, end=10),
+        Operand(name="short", bits=16, start=0, end=2),
+        Operand(name="next", bits=16, start=2, end=10),
+    ]
+    alloc = SliceAllocator().allocate(ops)
+    # "next" grabs the slices "short" freed inside the same register
+    assert alloc.register_pressure == 1
+    e = alloc.entries
+    assert e["next"].reg0 == e["short"].reg0
+    assert e["next"].mask0 == e["short"].mask0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from([4, 8, 12, 16, 20, 24, 28, 32]),
+              st.integers(0, 12), st.integers(1, 8)),
+    min_size=1, max_size=32))
+def test_fragmentation_after_mixed_width_frees(spec):
+    """Mixed widths with staggered live ranges: frees fragment the slice
+    masks, and later grabs must still never double-book a slice between
+    two *simultaneously live* operands."""
+    ops = [Operand(name=f"v{i}", bits=w, start=s, end=s + d)
+           for i, (w, s, d) in enumerate(spec)]
+    alloc = SliceAllocator().allocate(ops)
+    by_name = {o.name: o for o in ops}
+    placed = [(by_name[e.name], e.slice_positions())
+              for e in alloc.entries.values()]
+    for i, (oa, pa) in enumerate(placed):
+        assert len(pa) == oa.slices        # every slice actually granted
+        for ob, pb in placed[i + 1:]:
+            if oa.start < ob.end and ob.start < oa.end:   # overlap
+                assert not set(pa) & set(pb), (oa.name, ob.name)
+    assert alloc.register_pressure <= alloc.baseline_pressure
+    # the grab never exceeds the file: every reg id stays in range
+    for _, pos in placed:
+        for reg, s in pos:
+            assert 0 <= s < SLICES_PER_REGISTER
+            assert 0 <= reg < alloc.registers_used

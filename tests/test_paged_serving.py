@@ -1,0 +1,246 @@
+"""Paged-KV serving: dense/paged token exactness, pool accounting over
+the request lifecycle, prefix sharing + copy-on-write, over-commit, and
+the mode-naming error contract."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.allocator import PoolExhausted
+from repro.serving import ServeEngine, SpeculativeEngine
+
+
+def _tiny_cfg(name="qwen3_8b", kv_bits=None):
+    cfg = get_config(name).reduced()
+    if kv_bits is not None:
+        cfg = dataclasses.replace(
+            cfg, compression=dataclasses.replace(
+                cfg.compression, kv_bits=kv_bits))
+    return cfg
+
+
+def _prompt_mix(cfg, lens=(0, 1, 3, 15, 16, 17, 40)):
+    rng = np.random.default_rng(11)
+    return [list(rng.integers(1, cfg.vocab_size, n)) for n in lens]
+
+
+def _drain(eng, prompts, max_new=6):
+    rids = [eng.submit(list(p), max_new_tokens=max_new) for p in prompts]
+    stats = eng.run_until_drained()
+    return [eng.result(r) for r in rids], stats
+
+
+# -- token exactness ----------------------------------------------------------
+
+@pytest.mark.parametrize("kv_bits,page", [(None, 8), (None, 16), (8, 8)])
+def test_paged_engine_matches_dense_greedy(kv_bits, page):
+    """Paged attention gathers pages into the very shape the dense
+    kernel sees, so greedy outputs are bitwise identical — dense KV and
+    packed (kv_bits) KV alike, across page sizes."""
+    cfg = _tiny_cfg(kv_bits=kv_bits)
+    prompts = _prompt_mix(cfg)
+    dense, _ = _drain(ServeEngine(cfg, max_seq_len=64, max_slots=3),
+                      prompts)
+    paged, _ = _drain(
+        ServeEngine(cfg, max_seq_len=64, max_slots=3, paged=True,
+                    kv_page_size=page), prompts)
+    assert dense == paged
+
+
+def test_paged_engine_matches_dense_encdec():
+    cfg = _tiny_cfg("whisper_small")
+    prompts = _prompt_mix(cfg, lens=(0, 2, 9))
+    dense, _ = _drain(ServeEngine(cfg, max_seq_len=32, max_slots=2),
+                      prompts, max_new=4)
+    paged, _ = _drain(
+        ServeEngine(cfg, max_seq_len=32, max_slots=2, paged=True,
+                    kv_page_size=8), prompts, max_new=4)
+    assert dense == paged
+
+
+# -- pool lifecycle -----------------------------------------------------------
+
+def test_pool_drains_back_to_empty():
+    """Eviction at finish: after the queue drains, every page and every
+    reservation is back in the pool."""
+    cfg = _tiny_cfg()
+    eng = ServeEngine(cfg, max_seq_len=64, max_slots=3, paged=True,
+                      kv_page_size=8)
+    _drain(eng, _prompt_mix(cfg))
+    assert eng.pool.used == 0
+    assert eng.pool.reserved == 0
+    assert eng.pool.free_pages == eng.pool.n_pages
+    assert eng.pool.peak_used > 0
+    assert eng.pool_utilization == 0.0
+
+
+def test_per_request_pages_scale_with_actual_length():
+    """The tentpole's bytes story: a short request's peak page count is
+    below a long one's, and both are at most the dense worst case."""
+    cfg = _tiny_cfg()
+    eng = ServeEngine(cfg, max_seq_len=64, max_slots=2, paged=True,
+                      kv_page_size=8)
+    short = eng.submit([1, 2], max_new_tokens=4)
+    long_ = eng.submit(list(range(1, 40)), max_new_tokens=4)
+    reqs = {r.rid: r for r in eng._active.values()}
+    eng.run_until_drained()
+    assert eng.result(short) is not None and eng.result(long_) is not None
+    max_pages = 64 // 8
+    assert reqs[short].pages_peak < reqs[long_].pages_peak <= max_pages
+
+
+def test_overcommit_admits_beyond_dense_capacity():
+    """A pool half the dense worst case still serves 4 slots of short
+    requests concurrently — and drains token-exactly."""
+    cfg = _tiny_cfg()
+    prompts = [[1 + i] for i in range(8)]
+    dense, _ = _drain(ServeEngine(cfg, max_seq_len=64, max_slots=4),
+                      prompts, max_new=4)
+    eng = ServeEngine(cfg, max_seq_len=64, max_slots=4, paged=True,
+                      kv_page_size=8, kv_pool_pages=16)  # dense needs 32
+    rids = [eng.submit(list(p), max_new_tokens=4) for p in prompts]
+    peak = 0
+    while eng._queue or eng._active:
+        eng.step()
+        peak = max(peak, len(eng._active))
+    assert [eng.result(r) for r in rids] == dense
+    assert peak > 16 // 8   # more residents than pool-as-dense capacity
+
+
+def test_admission_defers_when_pool_exhausted():
+    """FIFO-preserving pool headroom: the head waits for pages instead
+    of deadlocking mid-flight, and everything still completes."""
+    cfg = _tiny_cfg()
+    eng = ServeEngine(cfg, max_seq_len=64, max_slots=4, paged=True,
+                      kv_page_size=8, kv_pool_pages=6)
+    prompts = [list(range(1, 20))] * 4    # ~3 pages each: one at a time
+    outs, _ = _drain(eng, prompts, max_new=4)
+    assert all(len(o) == 4 for o in outs)
+    assert eng.pool.used == 0 and eng.pool.reserved == 0
+
+
+# -- prefix sharing -----------------------------------------------------------
+
+def test_shared_prefix_dedups_and_stays_exact():
+    cfg = _tiny_cfg()
+    rng = np.random.default_rng(3)
+    system = list(rng.integers(1, cfg.vocab_size, 24))
+    prompts = [system + list(rng.integers(1, cfg.vocab_size, n))
+               for n in (2, 5, 7, 3)]
+    dense, _ = _drain(ServeEngine(cfg, max_seq_len=64, max_slots=4),
+                      prompts)
+    eng = ServeEngine(cfg, max_seq_len=64, max_slots=4, paged=True,
+                      kv_page_size=8)
+    rids = [eng.submit(list(p), max_new_tokens=6) for p in prompts]
+    # sharers hold the same physical pages for the system prompt
+    tables = eng._table[[eng._active[r].slot for r in rids], :3]
+    assert (tables == tables[0]).all()
+    shared_ids = set(tables[0].tolist())
+    assert all(eng.pool.refcount(p) == 4 for p in shared_ids)
+    stats = eng.run_until_drained()
+    assert [eng.result(r) for r in rids] == dense
+    assert stats["prefix_hits"] >= 9      # 3 sharers x 3 pages
+    assert stats["prefix_hit_rate"] > 0
+    assert eng.pool.used == 0             # last holder evicted the pages
+
+
+def test_registration_waits_for_prefill():
+    """A key is only matchable once its rows are written: sharers
+    admitted in the same batch as the writer must miss (and recompute)
+    rather than attend over unwritten pages."""
+    cfg = _tiny_cfg()
+    system = list(range(1, 25))
+    prompts = [system + [100 + i] for i in range(3)]
+    eng = ServeEngine(cfg, max_seq_len=64, max_slots=3, paged=True,
+                      kv_page_size=8)
+    # queue everything behind a full engine so one _admit batch takes all
+    blockers = [eng.submit([1], max_new_tokens=2) for _ in range(3)]
+    rids = [eng.submit(list(p), max_new_tokens=2) for p in prompts]
+    eng.run_until_drained()
+    assert all(eng.result(r) is not None for r in blockers + rids)
+    # same-batch admission: everyone prefilled privately, zero hits —
+    # but outputs across the batch still agree with a dense run
+    dense, _ = _drain(ServeEngine(cfg, max_seq_len=64, max_slots=3),
+                      [[1]] * 3 + prompts, max_new=2)
+    assert [eng.result(r) for r in blockers + rids] == dense
+
+
+def test_copy_on_write_splits_shared_tail():
+    """The defensive COW path: force a request's append page to be
+    shared and check the write lands in a private copy."""
+    cfg = _tiny_cfg()
+    eng = ServeEngine(cfg, max_seq_len=64, max_slots=2, paged=True,
+                      kv_page_size=8)
+    rid = eng.submit(list(range(1, 9)), max_new_tokens=4)
+    req = eng._active[rid]
+    page = int(eng._table[req.slot, 0])
+    eng.pool.retain(page)                  # simulate an outside sharer
+    req.prefix_keys = []                   # outside any registered prefix
+    req.kv_len = 7                         # next append lands in page 0
+    eng._ensure_tail_private(req)
+    fresh = int(eng._table[req.slot, 0])
+    assert fresh != page
+    assert eng.pool.refcount(page) == 1    # our share dropped
+    assert eng.pool.refcount(fresh) == 1
+    eng.pool.free(page)                    # drop the simulated sharer
+
+
+# -- error contract -----------------------------------------------------------
+
+def test_submit_error_names_mode():
+    cfg = _tiny_cfg()
+    dense = ServeEngine(cfg, max_seq_len=16, max_slots=2)
+    with pytest.raises(ValueError, match=r"dense KV mode"):
+        dense.submit(list(range(1, 30)), max_new_tokens=4)
+    paged = ServeEngine(cfg, max_seq_len=16, max_slots=2, paged=True,
+                        kv_page_size=8)
+    with pytest.raises(ValueError, match=r"paged KV mode: page table"):
+        paged.submit(list(range(1, 30)), max_new_tokens=4)
+
+
+def test_paged_refuses_recurrent_families_by_name():
+    with pytest.raises(ValueError, match=r"paged KV mode refused"):
+        ServeEngine(_tiny_cfg("falcon_mamba_7b"), max_seq_len=32,
+                    max_slots=2, paged=True)
+    with pytest.raises(ValueError, match=r"dense KV mode"):
+        SpeculativeEngine(_tiny_cfg("falcon_mamba_7b"), max_seq_len=32,
+                          max_slots=2)
+
+
+def test_page_size_must_divide_seq_len():
+    with pytest.raises(ValueError, match="must divide"):
+        ServeEngine(_tiny_cfg(), max_seq_len=60, max_slots=2, paged=True,
+                    kv_page_size=16)
+
+
+def test_pool_exhausted_mid_flight_names_paged_mode():
+    cfg = _tiny_cfg()
+    eng = ServeEngine(cfg, max_seq_len=64, max_slots=2, paged=True,
+                      kv_page_size=8, kv_pool_pages=8)
+    rid = eng.submit([1, 2], max_new_tokens=4)
+    req = eng._active[rid]
+    req.reserved_pages = 0                 # sabotage the guarantee
+    eng.pool._reserved = 0
+    while eng.pool.free_pages:
+        eng.pool.alloc()
+    with pytest.raises(PoolExhausted, match="paged KV mode"):
+        eng._ensure_rows(req, 30)
+
+
+# -- drain stats --------------------------------------------------------------
+
+def test_drain_stats_report_pool_and_sharing():
+    cfg = _tiny_cfg()
+    eng = ServeEngine(cfg, max_seq_len=64, max_slots=2, paged=True,
+                      kv_page_size=8)
+    _, stats = _drain(eng, [[1, 2, 3], [4, 5]], max_new=3)
+    for key in ("slot_occupancy", "kv_page_size", "kv_pool_pages",
+                "pool_utilization", "pool_peak_utilization",
+                "prefix_hit_rate", "prefix_hits", "prefix_queries"):
+        assert key in stats, key
+    assert stats["pool_peak_utilization"] > 0
+    dense = ServeEngine(cfg, max_seq_len=64, max_slots=2)
+    _, dstats = _drain(dense, [[1, 2]], max_new=2)
+    assert "pool_utilization" not in dstats
+    assert dense.pool_utilization == 0.0 and dense.prefix_hit_rate == 0.0

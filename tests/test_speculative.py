@@ -354,6 +354,27 @@ def test_greedy_speculative_exactness_other_families(arch):
         assert base.result(a) == spec.result(b)
 
 
+@pytest.mark.parametrize("k", [1, 3])
+def test_greedy_speculative_paged_matches_dense(k):
+    """Paged-vs-dense token exactness across the prompt-length mix and
+    k: the page-table indirection must be invisible to the draft/verify/
+    rollback cycle (both caches page through one shared table)."""
+    cfg = _tiny_cfg()
+    prompts = _prompt_mix(cfg)
+    dense = SpeculativeEngine(cfg, max_seq_len=128, max_slots=3, k=k)
+    rd = [dense.submit(p, max_new_tokens=6) for p in prompts]
+    dense.run_until_drained()
+    paged = SpeculativeEngine(cfg, max_seq_len=128, max_slots=3, k=k,
+                              paged=True, kv_page_size=16)
+    rp = [paged.submit(p, max_new_tokens=6) for p in prompts]
+    stats = paged.run_until_drained()
+    for a, b in zip(rd, rp):
+        assert dense.result(a) == paged.result(b), k
+    # rollback trim kept pool usage at committed length: fully drained
+    assert paged.pool.used == 0 and paged.pool.reserved == 0
+    assert stats["pool_peak_utilization"] > 0
+
+
 def test_speculative_refuses_recurrent_families():
     with pytest.raises(ValueError, match="roll"):
         SpeculativeEngine(_tiny_cfg("falcon_mamba_7b"), max_seq_len=32,
