@@ -3,12 +3,49 @@ benches. Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only fig9,roofline
+
+Every ``BENCH_*.json`` artifact a selected bench (re)writes gets a
+``telemetry`` key stamped in afterwards: the backend support matrix and
+the full ``obs.REGISTRY`` snapshot at the end of the run — so an
+archived artifact records which kernel paths actually dispatched and
+what the byte counters read when it was produced.
 """
 from __future__ import annotations
 
 import argparse
+import glob
+import json
+import os
 import sys
+import time
 import traceback
+
+
+def _stamp_telemetry(t_start: float) -> int:
+    """Embed {support_matrix, metrics} into every BENCH_*.json this run
+    touched (mtime >= t_start). Artifacts from earlier runs are left
+    alone — their telemetry described *their* run."""
+    from repro import compat, obs
+    telemetry = {
+        "support_matrix": compat.support_matrix(),
+        "metrics": obs.REGISTRY.snapshot(),
+    }
+    stamped = 0
+    for path in sorted(glob.glob("BENCH_*.json")):
+        if os.path.getmtime(path) < t_start:
+            continue
+        try:
+            with open(path) as f:
+                art = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if not isinstance(art, dict):
+            continue
+        art["telemetry"] = telemetry
+        with open(path, "w") as f:
+            json.dump(art, f, indent=1, default=str)
+        stamped += 1
+    return stamped
 
 
 def main() -> None:
@@ -55,6 +92,7 @@ def main() -> None:
     selected = (set(args.only.split(",")) if args.only else set(benches))
 
     print("name,us_per_call,derived")
+    t_start = time.time()
     failed = 0
     for name, fn in benches.items():
         if name not in selected:
@@ -66,6 +104,9 @@ def main() -> None:
             failed += 1
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    stamped = _stamp_telemetry(t_start)
+    if stamped:
+        print(f"telemetry,0.0,stamped:{stamped}", flush=True)
     if failed:
         raise SystemExit(f"{failed} benchmark group(s) failed")
 

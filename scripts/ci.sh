@@ -79,6 +79,20 @@ if ! $smoke_only; then
         echo "BENCH_train_packed.json artifact missing" >&2; exit 1; }
     test -f BENCH_calibration.json || {
         echo "BENCH_calibration.json artifact missing" >&2; exit 1; }
+
+    echo "== instrumented serve smoke (telemetry stream) =="
+    # A short paged speculative serve with --metrics-out, then the
+    # stream is validated against the schema contract (exact key set of
+    # the final serve.metrics event, span/event record shape, and the
+    # fused-bytes-vs-analytic-bits/32 parity within 1%). The validator
+    # fails on an empty or malformed stream; the JSONL is archived
+    # beside the BENCH_*.json artifacts.
+    rm -f BENCH_serve_metrics.jsonl
+    python -m repro.launch.serve --arch qwen3_8b --reduced \
+        --requests 8 --max-new-tokens 4 --max-seq-len 64 \
+        --speculative 2 --paged --pack-weights \
+        --metrics-out BENCH_serve_metrics.jsonl --metrics-interval 4
+    python -m repro.obs.validate BENCH_serve_metrics.jsonl
 fi
 
 echo "== 8-device distributed smoke (mesh matrix) =="

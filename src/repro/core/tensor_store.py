@@ -273,3 +273,24 @@ def tree_bytes(tree: Any) -> Tuple[int, int]:
             packed += b
             logical += n * 4
     return packed, logical
+
+
+def weight_pass_bytes(tree: Any) -> Dict[str, int]:
+    """Byte cost of streaming every weight of ``tree`` once, split by
+    path: ``fused`` (packed leaves, the bytes the fused kernels read),
+    ``fused_f32`` (what those leaves would cost dense f32),
+    ``analytic`` (the paper's bits/32 model summed per leaf — no
+    group-of-32 padding, the reference the live telemetry byte counters
+    are held to within ``obs.schema.BYTE_TOLERANCE``), and ``dense``
+    (plain leaves: norms, biases, unpacked weights)."""
+    fused = fused_f32 = analytic = dense = 0
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=is_packed):
+        if is_packed(leaf):
+            fused += leaf.nbytes_packed
+            fused_f32 += leaf.nbytes_logical_f32
+            analytic += leaf.nbytes_logical_f32 * leaf.bits // 32
+        elif hasattr(leaf, "shape"):
+            n = int(np.prod(leaf.shape))
+            dense += n * np.dtype(leaf.dtype).itemsize
+    return {"fused": fused, "fused_f32": fused_f32,
+            "analytic": analytic, "dense": dense}

@@ -14,7 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro import compat
+from repro import compat, obs
 from repro.kernels import ref as _ref
 
 
@@ -53,7 +53,28 @@ def set_backend(mode: str) -> None:
     BACKEND = KernelBackend(mode)
 
 
+def record_dispatch(op: str, path: str, packed_bytes: int = 0) -> None:
+    """Dispatch telemetry: one count (and the packed operand's analytic
+    weight-read bytes) per *dispatch decision*, labeled by path — fused,
+    fused_batched, materialized, fallback, take, kv_decode. These
+    increment at **trace time**: under jit a cached trace re-executes
+    without re-dispatching, so the counters report which path each
+    compiled program took (the bench-only fused-vs-materialized split as
+    a live metric), while per-execution byte accounting lives with the
+    callers that count executions (ServeEngine/Trainer)."""
+    obs.REGISTRY.counter(
+        "kernel_dispatch_total",
+        "Kernel dispatch decisions by op and path (trace-time).",
+    ).inc(1, op=op, path=path)
+    if packed_bytes:
+        obs.REGISTRY.counter(
+            "kernel_dispatch_packed_bytes",
+            "Analytic packed weight-read bytes per dispatch (trace-time).",
+        ).inc(int(packed_bytes), op=op, path=path)
+
+
 def unpack(packed, bits: int, n: int, out_dtype=jnp.float32):
+    record_dispatch("unpack", "materialized", packed.size * 4)
     if BACKEND.use_pallas and packed.ndim == 2:
         from repro.kernels.unpack import unpack as _k
         return _k(packed, bits, n, out_dtype, interpret=BACKEND.interpret)
@@ -61,6 +82,7 @@ def unpack(packed, bits: int, n: int, out_dtype=jnp.float32):
 
 
 def pack(x, bits: int):
+    record_dispatch("pack", "encode")
     if BACKEND.use_pallas and x.ndim == 2:
         from repro.kernels.pack import pack as _k
         return _k(x, bits, interpret=BACKEND.interpret)
@@ -73,6 +95,7 @@ def take_rows(packed, indices, bits: int, n: int, kind: str = "float",
     gathered rows (the packed ``embed`` path). On the Pallas backends each
     row is DMA'd by a scalar-prefetched index and decoded in VMEM; the
     jnp oracle is the same gather+decode in XLA."""
+    record_dispatch("take_rows", "take")
     if BACKEND.use_pallas and packed.ndim == 2 and indices.ndim == 1:
         from repro.kernels.take import take_rows as _k
         return _k(packed, indices, bits, n, kind=kind, signed=signed,
@@ -85,6 +108,7 @@ def packed_matmul(x, w_packed, bits: int, n: int, transpose: bool = False):
     """Fused unpack+matmul (the models' packed-weight hot path). The
     kernel flattens leading batch dims itself; ``transpose`` selects
     contraction over the packed axis (tied ``unembed``)."""
+    record_dispatch("packed_matmul", "fused", w_packed.size * 4)
     if BACKEND.use_pallas:
         from repro.kernels.packed_matmul import packed_matmul as _k
         return _k(x, w_packed, bits, n, transpose=transpose,
@@ -97,6 +121,8 @@ def packed_matmul_batched(x, w_packed, bits: int, n: int,
     """Fused unpack+matmul over a leading expert axis (the MoE expert-bank
     hot path): x (E, C, K), w_packed (E, K, n*bits/32) uint32 (or
     (E, n, K*bits/32) when ``transpose``) -> (E, C, n)."""
+    record_dispatch("packed_matmul_batched", "fused_batched",
+                    w_packed.size * 4)
     if BACKEND.use_pallas:
         from repro.kernels.packed_matmul import (
             packed_matmul_batched as _k,
@@ -118,6 +144,8 @@ def packed_matmul_dw(x, g, transpose: bool = False, batched: bool = False):
 
 
 def kv_decode(q, k_packed, v_packed, kv_len, bits: int, d: int):
+    record_dispatch("kv_decode", "kv_decode",
+                    (k_packed.size + v_packed.size) * 4)
     if BACKEND.use_pallas:
         from repro.kernels.kv_decode import kv_decode as _k
         return _k(q, k_packed, v_packed, kv_len, bits, d,

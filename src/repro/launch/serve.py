@@ -77,8 +77,16 @@ def main() -> None:
     ap.add_argument("--quality-threshold", type=float, default=0.05,
                     help="--calibrate acceptance threshold (nats / %%)")
     ap.add_argument("--calib-batches", type=int, default=2)
+    ap.add_argument("--metrics-out", default=None, metavar="JSONL",
+                    help="stream structured telemetry (spans, events, "
+                         "serve.metrics snapshots) to this JSONL file")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    metavar="N",
+                    help="emit a serve.metrics snapshot every N ticks "
+                         "(0: only the final one at drain)")
     args = ap.parse_args()
 
+    from repro import obs
     from repro.configs import get_config
     from repro.core.compress import CompressionPlan
     from repro.serving import ServeEngine, SpeculativeEngine
@@ -115,8 +123,13 @@ def main() -> None:
         plan.save(args.save_plan)
         print(f"wrote plan to {args.save_plan}")
 
+    tracer = None
+    if args.metrics_out:
+        tracer = obs.Tracer()
+        tracer.set_sink(args.metrics_out)
     paged_kw = dict(paged=args.paged, kv_page_size=args.kv_page_size,
-                    kv_pool_pages=args.kv_pool_pages)
+                    kv_pool_pages=args.kv_pool_pages, tracer=tracer,
+                    metrics_interval=args.metrics_interval)
     if args.speculative:
         eng = SpeculativeEngine(
             cfg, max_seq_len=args.max_seq_len,
@@ -157,6 +170,10 @@ def main() -> None:
             print(f"adaptive: retunes={stats['retunes']} "
                   f"post_retune_acceptance="
                   f"{stats['post_retune_acceptance']:.3f}")
+    if tracer is not None:
+        tracer.close()
+        print(f"wrote telemetry to {args.metrics_out}")
+        print(obs.console_summary(obs.REGISTRY))
 
 
 if __name__ == "__main__":

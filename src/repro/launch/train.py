@@ -41,6 +41,12 @@ def main() -> None:
                          "per-leaf plan JSON (core.calibrate / "
                          "repro.tuning.calibrate) instead of the uniform "
                          "config width")
+    ap.add_argument("--metrics-out", default=None, metavar="JSONL",
+                    help="stream train.step / train.repack / "
+                         "train.metrics events to this JSONL file")
+    ap.add_argument("--metrics-interval", type=int, default=1,
+                    metavar="N",
+                    help="emit a train.step event every N steps")
     args = ap.parse_args()
 
     if os.environ.get("JAX_COORDINATOR"):
@@ -67,6 +73,8 @@ def main() -> None:
         pack_params=args.pack_params,
         repack_every=args.repack_every,
         plan_path=args.plan,
+        metrics_out=args.metrics_out,
+        metrics_interval=args.metrics_interval,
     )
 
     if args.reduced:
@@ -82,6 +90,8 @@ def main() -> None:
     print(f"final loss: {metrics['final_loss']:.4f}  "
           f"steps: {metrics['last_step'] + 1}  "
           f"stragglers: {metrics['straggler_events']}")
+    if args.metrics_out:
+        print(f"wrote telemetry to {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -77,9 +77,13 @@ def unpack_maybe(w, dtype=None):
     ``linear``/``unembed`` so they hit the fused kernel instead.
     """
     if is_st(w):
+        kops.record_dispatch("unpack_maybe", "materialized",
+                             w.packed.data.size * 4)
         x = _st_decode(w)
         return x.astype(dtype) if dtype is not None else x
     if is_packed(w):
+        kops.record_dispatch("unpack_maybe", "materialized",
+                             w.data.size * 4)
         x = w.unpack()
         return x.astype(dtype) if dtype is not None else x
     return w if dtype is None else w.astype(dtype)
@@ -221,6 +225,8 @@ def linear(x: jnp.ndarray, w, spec: str = "...d,df->...f",
         if _plain_matmul_spec(spec):
             return _packed_matmul(x, w, transpose=False)
         _warn_unfused_spec(_normalize_spec(spec))
+    if fallback and (is_st(w) or is_packed(w)):
+        kops.record_dispatch("linear", "fallback")
     w = unpack_maybe(w, x.dtype)
     return jnp.einsum(spec, x, w)
 
@@ -283,6 +289,8 @@ def expert_linear(x: jnp.ndarray, w, fallback: bool = False) -> jnp.ndarray:
     # materialized path: any leading dims before the (expert, K, N) tail
     # broadcast-batch (e.g. a still-stacked (L, E, K, N) bank); STWeight
     # leaves decode straight-through (codes forward, master tangent)
+    if fallback and (is_st(w) or is_packed(w)):
+        kops.record_dispatch("expert_linear", "fallback")
     return jnp.einsum("...ck,...kn->...cn", x, unpack_maybe(w, x.dtype))
 
 
@@ -336,6 +344,7 @@ def st_linear(x: jnp.ndarray, w, w_master: jnp.ndarray,
                             transpose).astype(x.dtype)
     # materialized reference: decoded values forward, straight-through to
     # w_master backward (w_dec carries the value, w_master the tangent)
+    kops.record_dispatch("st_linear", "fallback")
     w_dec = unpack_maybe(w, jnp.float32)
     w_st = w_dec + (w_master - jax.lax.stop_gradient(w_master)).astype(
         jnp.float32)
@@ -426,6 +435,8 @@ def unembed(x: jnp.ndarray, table_or_head, tied: bool,
                          transpose=tied)
     if _fusable(table_or_head) and not fallback:
         return _packed_matmul(x, table_or_head, transpose=tied)
+    if fallback and (is_st(table_or_head) or is_packed(table_or_head)):
+        kops.record_dispatch("unembed", "fallback")
     w = unpack_maybe(table_or_head, x.dtype)
     if tied:
         return jnp.einsum("...d,vd->...v", x, w)

@@ -1,0 +1,48 @@
+"""Unified observability: metrics registry, tracer, exporters, schema.
+
+The reporting seam for the whole stack — kernels, serving, training,
+launch, benchmarks, CI all publish through here (and later scale-out
+work: device-side tables, the multi-device engine, real-hardware runs).
+Dependency-free by design: stdlib only, so any module may import it
+without cycles.
+
+Two process-wide defaults mirror how Prometheus clients work:
+
+* ``REGISTRY`` — the default :class:`MetricsRegistry`; every subsystem
+  records into it unless handed a private one. ``REGISTRY.snapshot()``
+  is what benchmarks embed into ``BENCH_*.json``; ``REGISTRY.expose()``
+  is the Prometheus text exposition.
+* ``default_tracer()`` — a ring-buffer-only :class:`Tracer` used when a
+  caller does not supply one; launchers attach a JSONL sink to a fresh
+  tracer for ``--metrics-out``.
+"""
+from __future__ import annotations
+
+from repro.obs.export import console_summary, read_jsonl  # noqa: F401
+from repro.obs.registry import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.schema import (  # noqa: F401
+    check_byte_parity,
+    drain_keys,
+    snapshot_keys,
+    validate_metrics_jsonl,
+)
+from repro.obs.trace import Tracer  # noqa: F401
+
+#: the process-wide default registry
+REGISTRY = MetricsRegistry()
+
+_DEFAULT_TRACER: Tracer = Tracer()
+
+
+def default_tracer() -> Tracer:
+    """The process-wide ring-only tracer (no sink until one is set)."""
+    return _DEFAULT_TRACER
+
+
+def get_registry() -> MetricsRegistry:
+    return REGISTRY

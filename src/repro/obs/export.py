@@ -1,0 +1,61 @@
+"""Exporters: JSONL reading and the console summary table.
+
+The other two export formats live with their data: the Prometheus text
+exposition is ``MetricsRegistry.expose()`` and the JSONL event stream is
+``Tracer.set_sink``. This module holds the read side (``read_jsonl``,
+stdlib-only — the worked example in docs/observability.md builds on it)
+and the human side (``console_summary``).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterator, List
+
+from repro.obs.registry import MetricsRegistry
+
+
+def read_jsonl(path: str) -> Iterator[Dict[str, Any]]:
+    """Yield one record per non-empty line; malformed lines raise (a
+    metrics stream with broken lines is a bug, not noise to skip)."""
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                yield json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(
+                    f"{path}:{i + 1}: malformed JSONL record: {e}") from e
+
+
+def console_summary(registry: MetricsRegistry) -> str:
+    """Aligned name/labels/value table over the registry — the operator
+    view for launcher exits and CI logs. Histograms summarize to
+    count/mean/max-bucket instead of dumping every bucket."""
+    rows: List[List[str]] = []
+    for m in registry.metrics():
+        for labels, val in m.series():
+            lab = ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+            if m.kind == "histogram":
+                n = val["count"]
+                mean = val["sum"] / n if n else 0.0
+                cell = f"count={n} mean={mean:.6g}"
+            elif isinstance(val, float) and val != int(val):
+                cell = f"{val:.6g}"
+            else:
+                cell = str(int(val))
+            rows.append([m.name, lab, cell, m.kind])
+    if not rows:
+        return "(no metrics recorded)\n"
+    widths = [max(len(r[c]) for r in rows + [["metric", "labels",
+                                             "value", "type"]])
+              for c in range(4)]
+    head = ["metric", "labels", "value", "type"]
+    lines = [
+        "  ".join(h.ljust(w) for h, w in zip(head, widths)),
+        "  ".join("-" * w for w in widths),
+    ]
+    lines += ["  ".join(c.ljust(w) for c, w in zip(r, widths))
+              for r in rows]
+    return "\n".join(lines) + "\n"

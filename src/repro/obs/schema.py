@@ -1,0 +1,214 @@
+"""The metrics schema: canonical key sets + the JSONL stream validator.
+
+Dashboards key on metric names, so the names are a *contract*: the
+engine snapshot key sets live here as frozensets, the schema-stability
+test (``tests/test_metrics.py``) asserts the engines emit exactly these
+keys, and the CI validator (``python -m repro.obs.validate``) holds a
+serve run's JSONL stream to the same set. Changing a name means
+changing it here, in the engine, and knowingly breaking dashboards —
+which is the point.
+
+Byte-accounting invariant (the paper's saving as a live counter): a
+snapshot's cumulative ``weight_read_bytes_fused`` must equal
+``weight_passes x fused_analytic_bytes_per_pass`` — where the analytic
+per-pass figure is the bits/32 model summed per packed leaf — within
+``BYTE_TOLERANCE`` (group-of-32 padding is the only slack).
+``validate_metrics_jsonl`` enforces it on the final snapshot of a
+stream, for the target and (when speculative) the draft.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Tuple
+
+BYTE_TOLERANCE = 0.01
+
+#: keys every ``ServeEngine.metrics_snapshot()`` carries
+SNAPSHOT_KEYS_BASE = frozenset({
+    "ticks", "tokens", "slots",
+    "active_requests", "queued_requests", "finished_requests",
+    "admitted_requests", "admission_wait_s_mean",
+    "slot_occupancy",
+    "residency_max_sequences", "arithmetic_intensity",
+    "decode_calls", "prefill_calls",
+    "weight_passes",
+    "weight_read_bytes_fused", "weight_read_bytes_dense",
+    "fused_bytes_per_pass", "fused_analytic_bytes_per_pass",
+    "fused_f32_bytes_per_pass", "dense_bytes_per_pass",
+    "kv_rows_appended", "kv_rows_committed", "kv_bytes_appended",
+})
+
+#: additional keys when ``paged=True`` (the KVPagePool view)
+SNAPSHOT_KEYS_PAGED = frozenset({
+    "kv_page_size", "kv_pool_pages",
+    "pool_utilization", "pool_peak_utilization",
+    "pool_pages_used", "pool_pages_reserved", "pool_pages_free",
+    "prefix_hit_rate", "prefix_hits", "prefix_queries",
+    "pool_alloc_total", "pool_free_total", "pool_retain_total",
+    "pool_evict_total", "pool_reserve_total", "pool_release_total",
+    "cow_copies", "table_uploads", "table_upload_bytes",
+})
+
+#: additional keys on a ``SpeculativeEngine``
+SNAPSHOT_KEYS_SPECULATIVE = frozenset({
+    "k", "initial_k", "draft_bits", "draft_kv_bits",
+    "spec_ticks", "slot_ticks", "proposed", "accepted",
+    "acceptance_rate", "acceptance_ewma", "post_retune_acceptance",
+    "committed_per_tick", "committed_per_slot_tick",
+    "retunes",
+    "draft_weight_passes",
+    "draft_weight_read_bytes_fused", "draft_weight_read_bytes_dense",
+    "draft_fused_bytes_per_pass", "draft_fused_analytic_bytes_per_pass",
+    "draft_kv_bytes_appended",
+})
+
+#: drain-only extras ``run_until_drained`` adds on top of the snapshot
+DRAIN_EXTRA_KEYS = frozenset({"wall_s"})
+#: further drain extras when the adaptive controller is on
+DRAIN_EXTRA_KEYS_ADAPTIVE = frozenset({"adaptive", "retune_events"})
+
+#: required attrs of a ``train.step`` event (staleness rides along in
+#: packed-master mode at log_every boundaries only)
+TRAIN_STEP_EVENT_KEYS = frozenset({"step", "loss", "step_time_s"})
+
+#: attrs of the final ``train.metrics`` event
+TRAIN_FINAL_KEYS = frozenset({
+    "steps_completed", "last_step", "final_loss", "mean_step_time_s",
+    "repacks", "straggler_events",
+    "weight_passes", "weight_read_bytes_fused", "weight_read_bytes_dense",
+    "fused_analytic_bytes_per_pass",
+})
+
+
+def snapshot_keys(paged: bool = False,
+                  speculative: bool = False) -> frozenset:
+    """The exact ``metrics_snapshot()`` key set for an engine mode."""
+    keys = SNAPSHOT_KEYS_BASE
+    if paged:
+        keys = keys | SNAPSHOT_KEYS_PAGED
+    if speculative:
+        keys = keys | SNAPSHOT_KEYS_SPECULATIVE
+    return keys
+
+
+def drain_keys(paged: bool = False, speculative: bool = False,
+               adaptive: bool = False) -> frozenset:
+    """The exact ``run_until_drained`` stats key set for an engine mode."""
+    keys = snapshot_keys(paged, speculative) | DRAIN_EXTRA_KEYS
+    if adaptive:
+        keys = keys | DRAIN_EXTRA_KEYS_ADAPTIVE
+    return keys
+
+
+def check_byte_parity(snap: Dict[str, Any],
+                      prefix: str = "") -> List[str]:
+    """The fused-counter-vs-analytic-model check on one snapshot dict.
+
+    ``prefix`` selects the stream: "" for the target, "draft_" for the
+    draft. Returns error strings (empty when the invariant holds or the
+    stream is unpacked — a zero fused counter with zero analytic bytes
+    is simply a dense run, not a failure)."""
+    passes = snap.get(f"{prefix}weight_passes", 0)
+    got = snap.get(f"{prefix}weight_read_bytes_fused", 0)
+    per_pass = snap.get(f"{prefix}fused_analytic_bytes_per_pass", 0)
+    want = passes * per_pass
+    if want == 0:
+        if got != 0:
+            return [f"{prefix}weight_read_bytes_fused={got} but the "
+                    "analytic model predicts 0 (unpacked stream)"]
+        return []
+    rel = abs(got - want) / want
+    if rel > BYTE_TOLERANCE:
+        return [
+            f"{prefix}weight_read_bytes_fused={got} deviates "
+            f"{rel:.2%} from the analytic bits/32 model "
+            f"({passes} passes x {per_pass} B = {want} B); "
+            f"tolerance {BYTE_TOLERANCE:.0%}"]
+    return []
+
+
+def validate_metrics_jsonl(path: str) -> Tuple[Dict[str, int], List[str]]:
+    """Validate one ``--metrics-out`` stream end-to-end.
+
+    Checks: every line parses as JSON with the record shape; the stream
+    is non-empty; it carries at least one ``serve.metrics`` or
+    ``train.metrics`` event; the *final* such event matches the schema
+    key set for its (auto-detected) mode; and the byte-accounting
+    invariant holds. Returns ``(counts, errors)`` where counts
+    summarizes the stream (records/spans/events/metrics events) and an
+    empty error list means the stream is valid."""
+    errors: List[str] = []
+    counts = {"records": 0, "spans": 0, "events": 0, "metrics_events": 0}
+    last_serve: Dict[str, Any] = {}
+    last_train: Dict[str, Any] = {}
+    try:
+        with open(path) as f:
+            for i, line in enumerate(f):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError as e:
+                    errors.append(f"line {i + 1}: malformed JSON: {e}")
+                    continue
+                counts["records"] += 1
+                if not isinstance(rec, dict) or "kind" not in rec \
+                        or "name" not in rec or "ts" not in rec:
+                    errors.append(
+                        f"line {i + 1}: not a span/event record: "
+                        f"{str(rec)[:80]}")
+                    continue
+                kind = rec["kind"]
+                counts["spans" if kind == "span" else "events"] += 1
+                if kind == "span" and "dur_s" not in rec:
+                    errors.append(f"line {i + 1}: span without dur_s")
+                if rec["name"] == "serve.metrics":
+                    counts["metrics_events"] += 1
+                    last_serve = rec.get("attrs", {})
+                elif rec["name"] == "train.metrics":
+                    counts["metrics_events"] += 1
+                    last_train = rec.get("attrs", {})
+                elif rec["name"] == "train.step":
+                    missing = TRAIN_STEP_EVENT_KEYS - set(
+                        rec.get("attrs", {}))
+                    if missing:
+                        errors.append(
+                            f"line {i + 1}: train.step missing "
+                            f"{sorted(missing)}")
+    except OSError as e:
+        return counts, [f"cannot read {path}: {e}"]
+
+    if counts["records"] == 0:
+        errors.append("empty metrics stream")
+        return counts, errors
+    if counts["metrics_events"] == 0:
+        errors.append("no serve.metrics / train.metrics event in stream")
+        return counts, errors
+
+    if last_serve:
+        paged = "kv_page_size" in last_serve
+        spec = "k" in last_serve
+        want = snapshot_keys(paged, spec)
+        got = set(last_serve)
+        mode = (f"paged={paged} speculative={spec}")
+        if got != want:
+            extra, missing = got - want, want - got
+            if missing:
+                errors.append(
+                    f"serve.metrics [{mode}] missing keys: "
+                    f"{sorted(missing)}")
+            if extra:
+                errors.append(
+                    f"serve.metrics [{mode}] unexpected keys: "
+                    f"{sorted(extra)}")
+        errors.extend(check_byte_parity(last_serve))
+        if spec:
+            errors.extend(check_byte_parity(last_serve, "draft_"))
+    if last_train:
+        missing = TRAIN_FINAL_KEYS - set(last_train)
+        if missing:
+            errors.append(
+                f"train.metrics missing keys: {sorted(missing)}")
+        errors.extend(check_byte_parity(last_train))
+    return counts, errors

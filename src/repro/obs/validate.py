@@ -1,0 +1,37 @@
+"""CLI validator for ``--metrics-out`` JSONL streams.
+
+    python -m repro.obs.validate metrics.jsonl [more.jsonl ...]
+
+Exits nonzero when any stream is empty, malformed, schema-divergent, or
+fails the byte-accounting invariant — the CI gate for the instrumented
+serve smoke (``scripts/ci.sh``). All the actual checks live in
+``repro.obs.schema.validate_metrics_jsonl`` so tests and CI agree.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.obs.schema import validate_metrics_jsonl
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+", metavar="METRICS_JSONL")
+    args = ap.parse_args()
+
+    failed = 0
+    for path in args.paths:
+        counts, errors = validate_metrics_jsonl(path)
+        status = "OK" if not errors else "FAIL"
+        print(f"{path}: {status} — {counts['records']} records "
+              f"({counts['spans']} spans, {counts['events']} events, "
+              f"{counts['metrics_events']} metrics events)")
+        for err in errors:
+            print(f"  {err}", file=sys.stderr)
+        failed += bool(errors)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -41,11 +41,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.compat import jit, prng_fold_in, prng_key
 from repro.core.allocator import KVPagePool, PoolExhausted
 from repro.core.compress import repack, uniform_plan
 from repro.core.occupancy import TPU_V5E, TPUChipConfig, decode_residency
-from repro.core.tensor_store import tree_bytes
+from repro.core.tensor_store import tree_bytes, weight_pass_bytes
 from repro.models.config import ModelConfig
 from repro.models.lm import LM
 
@@ -112,8 +113,16 @@ class ServeEngine:
     kv_pool_pages: Optional[int] = None  # None: slots x pages/seq (no
     #                                      over-commit); smaller values
     #                                      over-commit slots vs. the pool
+    # observability: a Tracer for span/event emission (None: the
+    # process-wide ring-only default) and an optional cadence — every
+    # ``metrics_interval`` ticks a full ``serve.metrics`` snapshot event
+    # is emitted and mirrored into obs.REGISTRY gauges (0: drain only)
+    tracer: Optional[obs.Tracer] = None
+    metrics_interval: int = 0
 
     def __post_init__(self):
+        if self.tracer is None:
+            self.tracer = obs.default_tracer()
         self.lm = LM(self.cfg)
         self.params = self.lm.init(prng_key(0))
         self.weight_plan = None
@@ -121,6 +130,12 @@ class ServeEngine:
             self.weight_plan = self.plan or uniform_plan(
                 self.params, self.cfg.resolved_weight_bits)
             self.params = repack(self.params, self.weight_plan)
+        # per-pass byte figures, fixed at init: the live byte counters are
+        # these constants times host-side pass counts (execution-accurate
+        # under jit, where kernel-level dispatch counters are trace-time)
+        self._pass_bytes = weight_pass_bytes(self.params)
+        self._kv_bytes_per_row = self.cfg.kv_bytes_per_token(
+            self.cfg.resolved_kv_bits)
         # both the residency planner and kv_bytes_per_token read the same
         # resolved width, so the bytes accounting cannot skew if the
         # default ever moves
@@ -152,6 +167,7 @@ class ServeEngine:
             if self.kv_pool_pages is None:
                 self.kv_pool_pages = self.n_slots * self._max_pages
             self.pool = KVPagePool(self.kv_pool_pages, self.kv_page_size)
+            self.pool.on_event = self.tracer.event
             # host-side page tables (0 = scrap); pushed to device before
             # every jitted call because donation consumes the device copy
             self._table = np.zeros((self.n_slots, self._max_pages),
@@ -184,6 +200,19 @@ class ServeEngine:
         self._pending_prefill: Dict[int, List[int]] = {}
         self.ticks = 0
         self.tokens_out = 0
+        # host-side execution counters behind metrics_snapshot(); every
+        # field is a plain int/float so snapshotting never touches device
+        self._decode_calls = 0
+        self._prefill_calls = 0
+        self._weight_passes = 0
+        self._kv_rows_appended = 0
+        self._kv_rows_committed = 0
+        self._finished_total = 0
+        self._admitted_total = 0
+        self._admission_wait_sum = 0.0
+        self._cow_copies = 0
+        self._table_uploads = 0
+        self._table_upload_bytes = 0
         # Sampling key derivation: base = PRNGKey(tag) folded with a
         # per-engine nonce, then per tick fold in the tick counter and per
         # slot the slot index. Without the nonce a restarted engine
@@ -278,6 +307,15 @@ class ServeEngine:
             req.slot = slot
             self._active[req.rid] = req
             admitted = True
+            wait = time.perf_counter() - req.submitted_at
+            self._admitted_total += 1
+            self._admission_wait_sum += wait
+            obs.REGISTRY.histogram(
+                "serve_admission_wait_seconds",
+                "Submit-to-admit wait per request.",
+            ).observe(wait)
+            self.tracer.event("serve.admit", rid=req.rid, slot=slot,
+                              wait_s=wait, prompt_len=len(req.prompt))
             # reset this slot's KV length; prompt ingestion is chunked
             # below. An empty prompt still needs one deterministic first
             # token — without it the first tick would replay whatever
@@ -405,6 +443,8 @@ class ServeEngine:
             return
         fresh = self._alloc_page(req)
         self._copy_page(page, fresh)
+        self._cow_copies += 1
+        self.tracer.event("serve.cow", rid=req.rid, src=page, dst=fresh)
         self._table[req.slot, idx] = fresh
         self.pool.free(page)               # drop our share of the original
         if idx < req.shared_pages:
@@ -464,7 +504,10 @@ class ServeEngine:
         """Upload the host page table before a jitted call (donation
         consumed the previous device copy). Overridable — the
         speculative engine pushes the same table into its draft state."""
-        self.state["table"] = jnp.asarray(self._table)
+        self._table_uploads += 1
+        self._table_upload_bytes += self._table.nbytes
+        with self.tracer.span("serve.h2d_table", bytes=self._table.nbytes):
+            self.state["table"] = jnp.asarray(self._table)
 
     def _ingest_prompts(self) -> None:
         """Stream pending prompts through ``lm.prefill_step`` in chunks of
@@ -505,12 +548,20 @@ class ServeEngine:
                     self._flush_registrations(req)
             if self.paged:
                 self._push_tables()
-            self._prefill_call(jnp.asarray(tokens), jnp.asarray(n_valid))
+            rows = int(n_valid.sum())
+            self._kv_rows_appended += rows
+            self._kv_rows_committed += rows
+            with self.tracer.span("serve.prefill", chunk=chunk, rows=rows,
+                                  requests=len(pending)):
+                self._prefill_call(jnp.asarray(tokens),
+                                   jnp.asarray(n_valid))
 
     def _prefill_call(self, tokens: jnp.ndarray,
                       n_valid: jnp.ndarray) -> None:
         """One chunked KV-append over the slot array. Overridable — the
         speculative engine mirrors every chunk into its draft cache."""
+        self._prefill_calls += 1
+        self._weight_passes += 1
         self.state = self._prefill(self.params, self.state, tokens, n_valid)
 
     def _tick_key(self, salt: int = 0):
@@ -541,7 +592,13 @@ class ServeEngine:
                 self._ensure_rows(req, req.kv_len + 1)
             self._push_tables()
         toks = jnp.asarray(tokens)
-        logits, self.state = self._step(self.params, self.state, toks)
+        self._decode_calls += 1
+        self._weight_passes += 1
+        rows = len(self._active)
+        self._kv_rows_appended += rows
+        self._kv_rows_committed += rows
+        with self.tracer.span("serve.decode", requests=rows):
+            logits, self.state = self._step(self.params, self.state, toks)
         if self.paged:
             for req in self._active.values():
                 req.kv_len = min(req.kv_len + 1, self.max_seq_len)
@@ -561,55 +618,121 @@ class ServeEngine:
         emitted to finished outputs this tick."""
         if not self._active:
             return 0
-        committed = self._generate()
-        emitted = 0
-        finished: List[int] = []
-        for rid, toks in committed.items():
-            req = self._active[rid]
-            room = req.max_new_tokens - len(req.output)
-            take = toks[:room]
-            req.output.extend(take)
-            emitted += len(take)
-            if len(req.output) >= req.max_new_tokens:
-                req.done = True
-                req.finished_at = time.perf_counter()
-                finished.append(rid)
-        for rid in finished:               # evict: _active stays bounded
-            req = self._active.pop(rid)
-            self._results[rid] = req.output
-            if self.paged:
-                self._release_pages(req)   # pages back to the pool first,
-            self._free.append(req.slot)    # then the slot: occupancy win
-            self._pending_prefill.pop(rid, None)
-        while len(self._results) > self.max_results:
-            self._results.pop(next(iter(self._results)))
-        self._admit()
-        self.ticks += 1
-        self.tokens_out += emitted
+        with self.tracer.span("serve.tick", tick=self.ticks) as sp:
+            committed = self._generate()
+            emitted = 0
+            finished: List[int] = []
+            for rid, toks in committed.items():
+                req = self._active[rid]
+                room = req.max_new_tokens - len(req.output)
+                take = toks[:room]
+                req.output.extend(take)
+                emitted += len(take)
+                if len(req.output) >= req.max_new_tokens:
+                    req.done = True
+                    req.finished_at = time.perf_counter()
+                    finished.append(rid)
+            for rid in finished:           # evict: _active stays bounded
+                req = self._active.pop(rid)
+                self._results[rid] = req.output
+                if self.paged:
+                    self._release_pages(req)  # pages to the pool first,
+                self._free.append(req.slot)   # then the slot: occupancy
+                self._pending_prefill.pop(rid, None)
+            self._finished_total += len(finished)
+            while len(self._results) > self.max_results:
+                self._results.pop(next(iter(self._results)))
+            self._admit()
+            self.ticks += 1
+            self.tokens_out += emitted
+            sp["emitted"] = emitted
+            sp["finished"] = len(finished)
+        if self.metrics_interval and (
+                self.ticks % self.metrics_interval == 0):
+            self._emit_metrics()
         return emitted
+
+    # -- observability --------------------------------------------------------
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Point-in-time stats, callable mid-run. Pure read: every value
+        comes from host-side counters or O(1) properties, so calling it
+        never perturbs the engine (the schema-stability test drives a
+        snapshotting engine and a twin in lockstep and asserts identical
+        outputs). Key set is exactly ``obs.schema.snapshot_keys(paged,
+        speculative)``; ``run_until_drained`` returns this plus wall_s."""
+        snap: Dict[str, Any] = {
+            "ticks": self.ticks,
+            "tokens": self.tokens_out,
+            "slots": self.n_slots,
+            "active_requests": len(self._active),
+            "queued_requests": len(self._queue),
+            "finished_requests": self._finished_total,
+            "admitted_requests": self._admitted_total,
+            "admission_wait_s_mean": (
+                self._admission_wait_sum / self._admitted_total
+                if self._admitted_total else 0.0),
+            "slot_occupancy": self.occupancy,
+            "residency_max_sequences": self.residency.max_sequences,
+            "arithmetic_intensity": self.residency.arithmetic_intensity,
+            "decode_calls": self._decode_calls,
+            "prefill_calls": self._prefill_calls,
+            "weight_passes": self._weight_passes,
+            "weight_read_bytes_fused":
+                self._weight_passes * self._pass_bytes["fused"],
+            "weight_read_bytes_dense":
+                self._weight_passes * self._pass_bytes["dense"],
+            "fused_bytes_per_pass": self._pass_bytes["fused"],
+            "fused_analytic_bytes_per_pass": self._pass_bytes["analytic"],
+            "fused_f32_bytes_per_pass": self._pass_bytes["fused_f32"],
+            "dense_bytes_per_pass": self._pass_bytes["dense"],
+            "kv_rows_appended": self._kv_rows_appended,
+            "kv_rows_committed": self._kv_rows_committed,
+            "kv_bytes_appended":
+                self._kv_rows_appended * self._kv_bytes_per_row,
+        }
+        if self.pool is not None:
+            ev = self.pool.events
+            snap.update({
+                "kv_page_size": self.kv_page_size,
+                "kv_pool_pages": self.kv_pool_pages,
+                "pool_utilization": self.pool.utilization,
+                "pool_peak_utilization": self.pool.peak_utilization,
+                "pool_pages_used": self.pool.used,
+                "pool_pages_reserved": self.pool.reserved,
+                "pool_pages_free": self.pool.free_pages,
+                "prefix_hit_rate": self.pool.prefix_hit_rate,
+                "prefix_hits": self.pool.prefix_hits,
+                "prefix_queries": self.pool.prefix_queries,
+                "pool_alloc_total": ev["alloc"],
+                "pool_free_total": ev["free"],
+                "pool_retain_total": ev["retain"],
+                "pool_evict_total": ev["evict"],
+                "pool_reserve_total": ev["reserve"],
+                "pool_release_total": ev["release"],
+                "cow_copies": self._cow_copies,
+                "table_uploads": self._table_uploads,
+                "table_upload_bytes": self._table_upload_bytes,
+            })
+        return snap
+
+    def _emit_metrics(self) -> Dict[str, Any]:
+        """Snapshot -> tracer event ``serve.metrics`` + REGISTRY gauges
+        (``serve_<key>``, last-writer-wins across engines)."""
+        snap = self.metrics_snapshot()
+        self.tracer.event("serve.metrics", **snap)
+        gauge = obs.REGISTRY.gauge
+        for key, val in snap.items():
+            if isinstance(val, bool) or not isinstance(val, (int, float)):
+                continue
+            gauge(f"serve_{key}", f"ServeEngine {key} (live mirror)."
+                  ).set(float(val))
+        return snap
 
     def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
         t0 = time.perf_counter()
         while (self._queue or self._active) and self.ticks < max_ticks:
             self.step()
         dt = time.perf_counter() - t0
-        stats: Dict[str, Any] = {
-            "ticks": self.ticks,
-            "tokens": self.tokens_out,
-            "wall_s": dt,
-            "slots": self.n_slots,
-            "slot_occupancy": self.occupancy,
-            "residency_max_sequences": self.residency.max_sequences,
-            "arithmetic_intensity": self.residency.arithmetic_intensity,
-        }
-        if self.pool is not None:
-            stats.update({
-                "kv_page_size": self.kv_page_size,
-                "kv_pool_pages": self.kv_pool_pages,
-                "pool_utilization": self.pool.utilization,
-                "pool_peak_utilization": self.pool.peak_utilization,
-                "prefix_hit_rate": self.pool.prefix_hit_rate,
-                "prefix_hits": self.pool.prefix_hits,
-                "prefix_queries": self.pool.prefix_queries,
-            })
+        stats: Dict[str, Any] = self._emit_metrics()
+        stats["wall_s"] = dt
         return stats

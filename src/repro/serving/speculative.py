@@ -36,12 +36,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.compat import jit
 from repro.core.compress import derive_plan, repack, uniform_plan
 from repro.core.formats import FLOAT_LADDER, ladder_snap
 from repro.core.tensor_store import tree_bytes
 from repro.models.lm import LM
-from repro.serving.engine import ServeEngine, sample_per_slot
+from repro.serving.engine import (
+    ServeEngine,
+    sample_per_slot,
+    weight_pass_bytes,
+)
 
 
 @dataclasses.dataclass
@@ -240,6 +245,16 @@ class SpeculativeEngine(ServeEngine):
         self._window_proposed = 0
         self._window_accepted = 0
         self.retune_events: List[Dict[str, Any]] = []
+        # draft-stream byte accounting: per-pass figures change when the
+        # controller repacks, so cumulative bytes accrue at call time
+        # (passes x the figures in force) instead of passes x a constant
+        self._draft_pass_bytes = weight_pass_bytes(self.draft_params)
+        self._draft_kv_bytes_per_row = self.draft_kv_bytes_per_token
+        self._draft_weight_passes = 0
+        self._draft_bytes_fused = 0
+        self._draft_bytes_analytic = 0
+        self._draft_bytes_dense = 0
+        self._draft_kv_rows_appended = 0
 
     @property
     def _seq_headroom(self) -> int:
@@ -302,10 +317,21 @@ class SpeculativeEngine(ServeEngine):
         # the draft key can never coincide with a per-slot sampling key
         # derived from the same tick key.
         key = self._tick_key(salt=0x0D4AF7)
-        drafts, dlogits, self.draft_state = self._draft_k(
-            self.draft_params, self.draft_state, t0, key)
+        # the draft scan runs k single-token decodes plus one extra
+        # append (d_k's KV row): k+1 passes over the draft weights
+        self._count_draft_passes(self.k + 1)
+        with self.tracer.span("serve.draft", k=self.k,
+                              bits=self.draft_bits):
+            drafts, dlogits, self.draft_state = self._draft_k(
+                self.draft_params, self.draft_state, t0, key)
         vt = jnp.concatenate([t0, drafts], axis=1)       # (B, k+1)
-        vlogits, self.state = self._verify(self.params, self.state, vt)
+        self._decode_calls += 1
+        self._weight_passes += 1                 # one full-width verify
+        with self.tracer.span("serve.verify", positions=self.k + 1):
+            vlogits, self.state = self._verify(self.params, self.state, vt)
+        peak_rows = (self.k + 1) * len(self._active)
+        self._kv_rows_appended += peak_rows
+        self._draft_kv_rows_appended += peak_rows
 
         drafts_np = np.asarray(drafts)
         if self.greedy:
@@ -345,10 +371,20 @@ class SpeculativeEngine(ServeEngine):
                                  self.max_seq_len)
                 self._trim_pages(req)
         self._last_tokens = jnp.asarray(last)
+        self._kv_rows_committed += int(commits.sum())
         self.spec_ticks += 1
         if self.adaptive:
             self._maybe_retune()
         return out
+
+    def _count_draft_passes(self, n: int) -> None:
+        """Accrue ``n`` draft weight passes at the figures currently in
+        force (they move when the controller repacks)."""
+        self._draft_weight_passes += n
+        self._draft_bytes_fused += n * self._draft_pass_bytes["fused"]
+        self._draft_bytes_analytic += (
+            n * self._draft_pass_bytes["analytic"])
+        self._draft_bytes_dense += n * self._draft_pass_bytes["dense"]
 
     # -- adaptive retuning ----------------------------------------------------
     def _maybe_retune(self) -> None:
@@ -379,6 +415,11 @@ class SpeculativeEngine(ServeEngine):
             "proposed": self.proposed,
             "accepted": self.accepted,
         })
+        self.tracer.event("serve.retune", **self.retune_events[-1])
+        obs.REGISTRY.counter(
+            "serve_retune_total",
+            "Draft-controller retunes by action.",
+        ).inc(1, action=kind)
         if kind == "shrink_k":
             self._set_k(val)
         else:
@@ -398,6 +439,7 @@ class SpeculativeEngine(ServeEngine):
         self.draft_bits = bits
         self.draft_plan = derive_plan(self._base_plan, wbits - bits)
         self.draft_params = repack(self.params, self.draft_plan)
+        self._draft_pass_bytes = weight_pass_bytes(self.draft_params)
 
     def _set_k(self, k: int) -> None:
         """Shrink the per-tick proposal count. Never grows past the
@@ -477,6 +519,8 @@ class SpeculativeEngine(ServeEngine):
     def _prefill_call(self, tokens: jnp.ndarray,
                       n_valid: jnp.ndarray) -> None:
         super()._prefill_call(tokens, n_valid)
+        self._count_draft_passes(1)
+        self._draft_kv_rows_appended += int(np.asarray(n_valid).sum())
         self.draft_state = self._draft_prefill(
             self.draft_params, self.draft_state, tokens, n_valid)
 
@@ -522,25 +566,49 @@ class SpeculativeEngine(ServeEngine):
         return self.draft_cfg.kv_bytes_per_token(
             self.draft_cfg.resolved_kv_bits)
 
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """The base snapshot plus the draft stream. Note
+        ``draft_fused_analytic_bytes_per_pass`` is the *lifetime mean*
+        (cumulative analytic bytes / passes): under adaptive retuning
+        the per-pass figure moves mid-run, and the mean is the number
+        the byte-parity invariant holds against; with no retune it
+        equals the static per-pass figure exactly."""
+        snap = super().metrics_snapshot()
+        passes = self._draft_weight_passes
+        snap.update({
+            "k": self.k,
+            "initial_k": self._initial_k,
+            "draft_bits": self.draft_bits,
+            "draft_kv_bits": self.draft_kv_bits,
+            "spec_ticks": self.spec_ticks,
+            "slot_ticks": self.slot_ticks,
+            "proposed": self.proposed,
+            "accepted": self.accepted,
+            "acceptance_rate": self.acceptance_rate,
+            "acceptance_ewma": self._ewma,
+            "post_retune_acceptance": self.post_retune_acceptance,
+            "committed_per_tick": self.committed_per_tick,
+            "committed_per_slot_tick": self.committed_per_slot_tick,
+            "retunes": len(self.retune_events),
+            "draft_weight_passes": passes,
+            "draft_weight_read_bytes_fused": self._draft_bytes_fused,
+            "draft_weight_read_bytes_dense": self._draft_bytes_dense,
+            "draft_fused_bytes_per_pass": self._draft_pass_bytes["fused"],
+            "draft_fused_analytic_bytes_per_pass": (
+                self._draft_bytes_analytic / passes if passes
+                else self._draft_pass_bytes["analytic"]),
+            "draft_kv_bytes_appended": (
+                self._draft_kv_rows_appended
+                * self._draft_kv_bytes_per_row),
+        })
+        return snap
+
     def run_until_drained(self, max_ticks: int = 10000) -> Dict[str, Any]:
         stats = super().run_until_drained(max_ticks)
-        stats.update(
-            k=self.k,
-            draft_bits=self.draft_bits,
-            draft_kv_bits=self.draft_kv_bits,
-            acceptance_rate=self.acceptance_rate,
-            committed_per_tick=self.committed_per_tick,
-            committed_per_slot_tick=self.committed_per_slot_tick,
-            proposed=self.proposed,
-            accepted=self.accepted,
-        )
         if self.adaptive:
             stats.update(
                 adaptive=True,
-                initial_k=self._initial_k,
-                retunes=len(self.retune_events),
                 retune_events=list(self.retune_events),
-                post_retune_acceptance=self.post_retune_acceptance,
             )
         return stats
 

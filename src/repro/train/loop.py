@@ -28,10 +28,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.compat import jit, prng_key, tree_map
 from repro.core.compress import uniform_plan, repack
-from repro.core.tensor_store import is_packed, st_tree
+from repro.core.tensor_store import is_packed, st_tree, weight_pass_bytes
 from repro.data import SyntheticTokens
 from repro.distributed.grad_compress import (
     apply_error_feedback,
@@ -73,6 +74,11 @@ class TrainConfig:
     # plan at the config's resolved width. A checkpoint's manifest plan
     # still wins on resume (the codes on disk were encoded with it).
     plan_path: Optional[str] = None
+    # observability: a JSONL sink for structured events (train.step /
+    # train.repack / train.metrics) and the step cadence of train.step
+    # emission. None keeps events in the default tracer's ring only.
+    metrics_out: Optional[str] = None
+    metrics_interval: int = 1
 
 
 def _grad_loop(loss_fn, diff_arg, batch, tc: TrainConfig):
@@ -160,8 +166,15 @@ class Trainer:
     cfg: ModelConfig
     tc: TrainConfig
     opt_cfg: Optional[AdamWConfig] = None
+    tracer: Optional[obs.Tracer] = None
 
     def __post_init__(self):
+        if self.tracer is None:
+            if self.tc.metrics_out:
+                self.tracer = obs.Tracer()
+                self.tracer.set_sink(self.tc.metrics_out)
+            else:
+                self.tracer = obs.default_tracer()
         self.lm = LM(self.cfg)
         comp = self.cfg.compression
         self.opt_cfg = self.opt_cfg or AdamWConfig(
@@ -246,6 +259,13 @@ class Trainer:
         staleness_fn = (jit(packed_staleness)
                         if self.tc.pack_params else None)
         guard = PreemptionGuard(install=install_signals)
+        # per-pass byte figures: packed-master steps stream the codes
+        # twice (forward + fused dx backward — dW reads no weights), so
+        # the run's weight-read bytes are 2 x steps x these constants
+        pass_bytes = weight_pass_bytes(
+            packed if self.tc.pack_params else params)
+        repacks = 0
+        interval = max(self.tc.metrics_interval, 1)
 
         for step in range(start_step, self.tc.steps):
             t0 = time.perf_counter()
@@ -263,10 +283,27 @@ class Trainer:
             self.metrics["losses"].append(loss)
             self.metrics["step_times"].append(dt)
             last = step + 1 == self.tc.steps
+            stale = None
             if staleness_fn is not None and (
                     (step + 1) % self.tc.log_every == 0 or last):
-                self.metrics["staleness"].append(
-                    (step, float(staleness_fn(packed, params))))
+                stale = float(staleness_fn(packed, params))
+                self.metrics["staleness"].append((step, stale))
+            obs.REGISTRY.histogram(
+                "train_step_seconds", "Wall time per train step.",
+            ).observe(dt)
+            obs.REGISTRY.gauge(
+                "train_loss", "Most recent train-step loss.",
+            ).set(loss)
+            if (self.tc.pack_params
+                    and (step + 1) % self.tc.repack_every == 0):
+                repacks += 1
+                self.tracer.event("train.repack", step=step,
+                                  repack_every=self.tc.repack_every)
+            if (step + 1) % interval == 0 or last:
+                attrs = {"step": step, "loss": loss, "step_time_s": dt}
+                if stale is not None:
+                    attrs["packed_staleness"] = stale
+                self.tracer.event("train.step", **attrs)
             if self.ckpt and (
                 (step + 1) % self.tc.checkpoint_every == 0
                 or guard.requested
@@ -289,6 +326,28 @@ class Trainer:
             self.metrics["losses"][-1] if self.metrics["losses"] else None)
         self.metrics["straggler_events"] = self.watchdog.events
         self.metrics["last_step"] = step if self.metrics["losses"] else -1
+        # final telemetry event: exactly obs.schema.TRAIN_FINAL_KEYS.
+        # 2 weight passes per executed step (forward + fused dx backward)
+        steps_done = len(self.metrics["losses"])
+        passes = 2 * steps_done
+        final = {
+            "steps_completed": steps_done,
+            "last_step": self.metrics["last_step"],
+            "final_loss": self.metrics["final_loss"],
+            "mean_step_time_s": (
+                sum(self.metrics["step_times"]) / steps_done
+                if steps_done else 0.0),
+            "repacks": repacks,
+            "straggler_events": self.watchdog.events,
+            "weight_passes": passes,
+            "weight_read_bytes_fused": passes * pass_bytes["fused"],
+            "weight_read_bytes_dense": passes * pass_bytes["dense"],
+            "fused_analytic_bytes_per_pass": pass_bytes["analytic"],
+        }
+        self.tracer.event("train.metrics", **final)
+        self.tracer.flush()
+        for key, val in final.items():
+            self.metrics.setdefault(key, val)
         return self.metrics
 
 
