@@ -62,6 +62,45 @@ def _drain_tracked(eng, prompts):
     return [eng.result(r) for r in rids], stats, reqs, peak
 
 
+def _mixed_kv_leg(cfg, name: str, prompts) -> dict:
+    """Serve the same traffic with a mixed per-layer KV plan (layer 0 at
+    the config width, later layers one Table 3 rung down) through both
+    engines; dense and paged must stay token-exact against each other,
+    and the per-token KV accounting must come in under the uniform
+    figure."""
+    from repro.core.compress import CompressionPlan
+    from repro.core.formats import ladder_snap
+    from repro.serving import ServeEngine
+
+    base = cfg.resolved_kv_bits
+    n_kv = cfg.n_kv_layers
+    widths = [base] + [ladder_snap(base, below=True)] * (n_kv - 1)
+    plan = CompressionPlan(
+        float_bits={}, int_bits={},
+        kv_bits={f"kv/layer_{i}": b for i, b in enumerate(widths)})
+
+    dense = ServeEngine(cfg, max_seq_len=SEQ, max_slots=SLOTS, plan=plan)
+    dres, _, _, _ = _drain_tracked(dense, prompts)
+    paged = ServeEngine(cfg, max_seq_len=SEQ, max_slots=SLOTS,
+                        paged=True, kv_page_size=PAGE, plan=plan)
+    pres, _, _, _ = _drain_tracked(paged, prompts)
+    if dres != pres:
+        raise AssertionError(
+            f"{name}: paged output diverged from the dense engine "
+            "under a mixed per-layer KV plan")
+    mixed_kvb = dense.cfg.kv_bytes_per_token()
+    uniform_kvb = cfg.kv_bytes_per_token()
+    if n_kv > 1 and not mixed_kvb < uniform_kvb:
+        raise AssertionError(
+            f"{name}: mixed KV plan {widths} did not shrink "
+            f"kv_bytes_per_token ({mixed_kvb} vs uniform {uniform_kvb})")
+    return {
+        "mixed_kv_layer_bits": list(dense.cfg.resolved_kv_layer_bits),
+        "mixed_kv_bytes_per_token": mixed_kvb,
+        "mixed_greedy_exact": dres == pres,
+    }
+
+
 def bench_serving_paged() -> List[Tuple[str, float, str]]:
     from repro.configs import get_config
     from repro.serving import ServeEngine
@@ -133,10 +172,18 @@ def bench_serving_paged() -> List[Tuple[str, float, str]]:
             f"pool_peak_utilization={pstats['pool_peak_utilization']:.2f};"
             f"prefix_hit_rate={hit_rate:.2f}",
         ))
+        # mixed per-layer KV widths (the static-analysis plan family):
+        # install a two-width plan through ServeEngine(plan=) and assert
+        # the paged engine still matches dense token-exactly while the
+        # per-row accounting drops below the uniform figure
+        mixed_kv = _mixed_kv_leg(cfg, name, mixed)
+
         artifact["configs"].append({
             "config": name,
             "kv_bits": cfg.resolved_kv_bits,
+            "kv_layer_bits": list(cfg.resolved_kv_layer_bits),
             "kv_bytes_per_token": kvb,
+            **mixed_kv,
             "pool_pages": pool_pages,
             "pages_per_seq": pages_per_seq,
             "greedy_exact_mixed": dres == pres,

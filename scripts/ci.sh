@@ -80,6 +80,33 @@ if ! $smoke_only; then
     test -f BENCH_calibration.json || {
         echo "BENCH_calibration.json artifact missing" >&2; exit 1; }
 
+    echo "== static-analysis lint gate (packed-path auditor) =="
+    # The four-pass auditor (repro.analysis) over two zoo configs: the
+    # traced entry points must prove every planned leaf fused, the
+    # default plan must be sound against the derived range proofs, and
+    # the sharding/donation invariants must hold. Reports are archived
+    # (BENCH_lint_<arch>.json) and schema-validated. Then the two
+    # negative legs: a seeded-broken plan fixture and a seeded unfused
+    # dispatch must BOTH fail with a nonzero exit — a gate that cannot
+    # fail proves nothing.
+    rm -f BENCH_lint_qwen3_8b.json BENCH_lint_deepseek_moe_16b.json
+    python -m repro.analysis.lint --arch qwen3_8b --reduced \
+        --out BENCH_lint_qwen3_8b.json
+    python -m repro.analysis.lint --arch deepseek_moe_16b --reduced \
+        --out BENCH_lint_deepseek_moe_16b.json
+    python -m repro.obs.validate --lint \
+        BENCH_lint_qwen3_8b.json BENCH_lint_deepseek_moe_16b.json
+    if python -m repro.analysis.lint --arch qwen3_8b --reduced \
+        --plan tests/fixtures/broken_plan.json >/dev/null 2>&1; then
+        echo "lint gate failed: broken plan fixture passed the lint" >&2
+        exit 1
+    fi
+    if python -m repro.analysis.lint --arch qwen3_8b --reduced \
+        --inject-fallback >/dev/null 2>&1; then
+        echo "lint gate failed: seeded unfused dispatch passed" >&2
+        exit 1
+    fi
+
     echo "== instrumented serve smoke (telemetry stream) =="
     # A short paged speculative serve with --metrics-out, then the
     # stream is validated against the schema contract (exact key set of

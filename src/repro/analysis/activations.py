@@ -1,0 +1,323 @@
+"""Pass 1: static activation range inference -> per-layer KV widths.
+
+The paper's range analysis (Section 4.2) is integer-only; the KV cache
+stores *float* activations, so this pass extends the interval abstract
+interpretation to float magnitude bounds and walks them through the
+KV-producing slice of the transformer body.
+
+The interval domain is non-relational, so it cannot bound ``rms_norm``
+through a jaxpr alone (``x * rsqrt(mean(x^2))`` needs the relation
+between numerator and denominator). The norm's envelope *is* provable as
+a host-side lemma, though: ``|x_i| <= sqrt(d) * (1 + max|scale|)``
+because ``x_i^2 <= sum x^2 = d * mean(x^2)``. The pass therefore seeds
+the traced K/V projection with that static envelope (computed from the
+actual norm-scale values — static data, like the paper's kernel-launch
+knowledge), runs ``FloatRangeAnalysis`` over the traced ``xn @ Wk`` /
+``xn @ Wv`` jaxpr with per-layer weight intervals from the decoded
+weights, then applies two more host-side lemmas on the K stream:
+``qk_norm`` re-normalizes K (replacing its bound with the head-dim
+envelope) and RoPE's rotation at most doubles a coordinate bound
+(``|x1 cos - x2 sin| <= |x1| + |x2|``).
+
+The proven per-layer bound maps to the narrowest Table 3 float format
+whose ``max_finite`` clears it — a width below that is a *silent
+clipping proof* (the encoder saturates to the format max). The emitted
+width never goes below ``floor_bits`` (default: the config's own KV
+width, so the static plan can widen an unsound config but only narrows
+when explicitly allowed to)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.extend import core as jcore
+
+from repro.analysis.report import Finding
+from repro.core.formats import FLOAT_FORMATS, FLOAT_LADDER
+from repro.core.range_analysis import (
+    INF,
+    NEG_INF,
+    Interval,
+    RangeAnalysis,
+    _mul_bound,
+)
+
+_KV_FAMILIES = ("dense", "vlm", "moe")
+_EXP_SAFE = 700.0          # exp overflows f64 past ~709; cut early
+
+
+def _float_div(a: Interval, b: Interval) -> Interval:
+    """Real division (no integer floor — the parent's ``_div`` floors
+    both bounds, which is unsound for a float upper bound)."""
+    if b.lo <= 0 <= b.hi:
+        return Interval.top()
+    cs: List[float] = []
+    for x in (a.lo, a.hi):
+        for y in (b.lo, b.hi):
+            if math.isinf(x) or math.isinf(y):
+                cs.extend((NEG_INF, INF))
+            else:
+                cs.append(x / y)
+    return Interval(min(cs), max(cs))
+
+
+class FloatRangeAnalysis(RangeAnalysis):
+    """Interval abstract interpretation over float values too.
+
+    Inherits every integer transfer (they are sound over the reals:
+    add/sub/mul corner arithmetic, union joins, the widen-then-narrow
+    loop fixpoint) and adds float-specific ones: real literals become
+    real intervals, division loses the integer floor, and the
+    transcendentals/matmuls the transformer body is made of get
+    monotone-envelope transfers. Unknown primitives still fall to top —
+    the analysis is conservative, never wrong."""
+
+    def _read(self, atom) -> Interval:
+        if isinstance(atom, jcore.Literal):
+            v = np.asarray(atom.val)
+            if v.size and np.issubdtype(v.dtype, np.floating) and np.all(
+                    np.isfinite(v)):
+                return Interval(float(v.min()), float(v.max()))
+        return super()._read(atom)
+
+    def _transfer(self, eqn) -> None:
+        prim = eqn.primitive.name
+        outs = eqn.outvars
+
+        def out(itv: Interval, i: int = 0) -> None:
+            if i < len(outs):
+                self._write(outs[i], itv)
+
+        if prim in ("div", "floor", "exp", "log", "tanh", "logistic",
+                    "erf", "sin", "cos", "sqrt", "rsqrt", "integer_pow",
+                    "dot_general", "square"):
+            ins = [self._read(a) for a in eqn.invars]
+            a = ins[0]
+            if prim == "div":
+                out(_float_div(a, ins[1]))
+            elif prim == "floor":
+                out(Interval(
+                    a.lo if math.isinf(a.lo) else math.floor(a.lo),
+                    a.hi if math.isinf(a.hi) else math.floor(a.hi)))
+            elif prim == "exp":
+                lo = 0.0 if a.lo == NEG_INF else math.exp(min(a.lo,
+                                                              _EXP_SAFE))
+                hi = INF if a.hi > _EXP_SAFE else math.exp(a.hi)
+                out(Interval(lo, hi))
+            elif prim == "log":
+                if a.lo > 0:
+                    out(Interval(math.log(a.lo),
+                                 INF if math.isinf(a.hi)
+                                 else math.log(a.hi)))
+                else:
+                    out(Interval.top())
+            elif prim in ("tanh", "erf", "sin", "cos"):
+                out(Interval(-1.0, 1.0))
+            elif prim == "logistic":
+                out(Interval(0.0, 1.0))
+            elif prim == "sqrt":
+                if a.hi < 0:
+                    out(Interval.top())        # NaN domain: no claim
+                else:
+                    lo = math.sqrt(a.lo) if a.lo > 0 else 0.0
+                    out(Interval(lo, INF if math.isinf(a.hi)
+                                 else math.sqrt(a.hi)))
+            elif prim == "rsqrt":
+                if a.lo > 0:
+                    out(Interval(
+                        0.0 if math.isinf(a.hi)
+                        else 1.0 / math.sqrt(a.hi),
+                        1.0 / math.sqrt(a.lo)))
+                else:
+                    out(Interval.top())        # zero-crossing: unbounded
+            elif prim in ("integer_pow", "square"):
+                y = int(eqn.params.get("y", 2))
+                if y < 0 or math.isinf(a.lo) or math.isinf(a.hi):
+                    out(Interval.top())
+                else:
+                    cs = [a.lo ** y, a.hi ** y]
+                    if y % 2 == 0:
+                        lo = 0.0 if a.lo <= 0 <= a.hi else min(cs)
+                        out(Interval(lo, max(cs)))
+                    else:
+                        out(Interval(min(cs), max(cs)))
+            elif prim == "dot_general":
+                out(self._dot_general(eqn, ins))
+            return
+        super()._transfer(eqn)
+
+    def _dot_general(self, eqn, ins: List[Interval]) -> Interval:
+        """out = sum over K contracted products: |out| <= K * max corner
+        product of the operand intervals (zero-size contractions give an
+        exact zero)."""
+        a, b = ins[0], ins[1]
+        (lhs_c, _), _ = eqn.params["dimension_numbers"]
+        k = 1
+        for d in lhs_c:
+            k *= eqn.invars[0].aval.shape[d]
+        if k == 0:
+            return Interval.const(0.0)
+        cs = [_mul_bound(x, y) for x in (a.lo, a.hi) for y in (b.lo, b.hi)]
+        lo, hi = min(cs), max(cs)
+        return Interval(_mul_bound(float(k), lo) if lo < 0 else
+                        _mul_bound(float(k), lo),
+                        _mul_bound(float(k), hi))
+
+
+def width_for_bound(bound: float, floor_bits: int = FLOAT_LADDER[0]) -> int:
+    """Narrowest Table 3 rung whose ``max_finite`` clears ``bound`` (an
+    unbounded proof keeps full width), floored at ``floor_bits``."""
+    if math.isinf(bound) or math.isnan(bound):
+        return 32
+    for b in FLOAT_LADDER:
+        if b >= floor_bits and FLOAT_FORMATS[b].max_finite >= bound:
+            return b
+    return 32
+
+
+def _abs_max(arr) -> float:
+    a = np.asarray(arr, np.float64)
+    return float(np.abs(a).max()) if a.size else 0.0
+
+
+def _layer_leaf(blocks: Dict, names: Tuple[str, ...], layer: int):
+    node: Any = blocks
+    for n in names:
+        node = node[n]
+    return np.asarray(node)[layer]
+
+
+def infer_kv_widths(
+    cfg,
+    params: Optional[Dict] = None,
+    floor_bits: Optional[int] = None,
+) -> Tuple[Dict[str, int], Dict[str, float], List[Finding]]:
+    """Per-layer KV widths for ``cfg``: ``({"kv/layer_i": bits},
+    {"kv/layer_i": proven bound}, findings)``.
+
+    ``params`` is the *dense* param tree evidence (initialized fresh when
+    omitted — deployment would pass the checkpoint); ``floor_bits``
+    defaults to the config's own KV width, so the default inference can
+    widen an overflow-unsafe config but never narrows below it without
+    an explicit opt-in (narrowing trades range for bytes exactly like
+    the paper's quality-gated tuning, which this pass does not run)."""
+    findings: List[Finding] = []
+    if cfg.family not in _KV_FAMILIES:
+        findings.append(Finding(
+            check="activation_width", severity="info",
+            message=(
+                f"family {cfg.family!r} is outside the per-layer KV "
+                "width domain (single stacked decode scan families "
+                "only); keeping the uniform config width"),
+        ))
+        return {}, {}, findings
+    if params is None:
+        from repro.compat import prng_key
+        from repro.models.lm import LM
+        params = LM(cfg).init(prng_key(0))
+
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    blocks = params["blocks"]
+    attn = blocks["attn"]
+    floor = floor_bits if floor_bits is not None else (
+        cfg.compression.kv_bits or 16)
+
+    def project(xn, wk, wv):
+        return xn @ wk, xn @ wv
+
+    kv_bits: Dict[str, int] = {}
+    kv_bounds: Dict[str, float] = {}
+    example = (
+        jnp.zeros((1, d), jnp.float32),
+        jnp.zeros((d, np.asarray(attn["wk"]).shape[-1]), jnp.float32),
+        jnp.zeros((d, np.asarray(attn["wv"]).shape[-1]), jnp.float32),
+    )
+    for layer in range(cfg.n_kv_layers):
+        # static envelope of the pre-projection rms_norm (host lemma:
+        # |xn_i| <= sqrt(d) * (1 + max|scale|), scales from the actual
+        # checkpointed values)
+        ln_scale = _abs_max(_layer_leaf(blocks, ("attn", "ln"), layer))
+        x_bound = math.sqrt(d) * (1.0 + ln_scale)
+        wk_max = _abs_max(_layer_leaf(blocks, ("attn", "wk"), layer))
+        wv_max = _abs_max(_layer_leaf(blocks, ("attn", "wv"), layer))
+
+        report = _analyze_projection(project, example, x_bound,
+                                     wk_max, wv_max)
+        k_itv, v_itv = report
+        k_bound = max(abs(k_itv.lo), abs(k_itv.hi))
+        v_bound = max(abs(v_itv.lo), abs(v_itv.hi))
+        if cfg.qk_norm:
+            # host lemma: K is rms-normalized per head after projection —
+            # the projection bound is superseded by the head-dim envelope
+            kn_scale = _abs_max(
+                _layer_leaf(blocks, ("attn", "k_norm"), layer))
+            k_bound = math.sqrt(hd) * (1.0 + kn_scale)
+        # host lemma: RoPE rotates coordinate pairs —
+        # |x1 cos - x2 sin| <= |x1| + |x2| <= 2 * bound
+        k_bound *= 2.0
+        bound = max(k_bound, v_bound)
+        key = f"kv/layer_{layer}"
+        kv_bounds[key] = bound
+        bits = width_for_bound(bound, floor)
+        kv_bits[key] = bits
+        if math.isinf(bound):
+            findings.append(Finding(
+                check="activation_width", severity="warning", path=key,
+                message=(
+                    f"layer {layer}: KV magnitude bound did not "
+                    "converge (top); emitting full width"),
+            ))
+        elif bits > (cfg.compression.kv_bits or 16):
+            findings.append(Finding(
+                check="activation_width", severity="warning", path=key,
+                message=(
+                    f"layer {layer}: proven KV bound {bound:.4g} "
+                    f"exceeds max_finite of the configured "
+                    f"{cfg.compression.kv_bits or 16}-bit format; "
+                    f"plan widens to AF{bits}"),
+                detail={"bound": bound, "config_bits":
+                        cfg.compression.kv_bits or 16, "plan_bits": bits},
+            ))
+    findings.append(Finding(
+        check="activation_width", severity="info",
+        message=(
+            f"proved KV bounds for {len(kv_bits)} layers "
+            f"(floor AF{floor}); widths "
+            f"{sorted(set(kv_bits.values()))}"),
+        detail={"floor_bits": floor},
+    ))
+    return kv_bits, kv_bounds, findings
+
+
+def _analyze_projection(project, example, x_bound: float,
+                        wk_max: float, wv_max: float
+                        ) -> Tuple[Interval, Interval]:
+    """Run ``FloatRangeAnalysis`` over the traced K/V projection with
+    the host-lemma input envelopes; returns the two output intervals."""
+    closed = jax.make_jaxpr(project)(*example)
+    jaxpr = closed.jaxpr
+    ra = FloatRangeAnalysis()
+    seeds = (
+        Interval(-x_bound, x_bound),
+        Interval(-wk_max, wk_max),
+        Interval(-wv_max, wv_max),
+    )
+    for v, itv in zip(jaxpr.invars, seeds):
+        ra._write(v, itv)
+    for v in jaxpr.constvars:
+        ra._write(v, Interval.top())
+    for eqn in jaxpr.eqns:
+        ra._transfer(eqn)
+    return ra._read(jaxpr.outvars[0]), ra._read(jaxpr.outvars[1])
+
+
+def kv_plan_entries(cfg, params: Optional[Dict] = None,
+                    floor_bits: Optional[int] = None) -> Dict[str, int]:
+    """Just the ``kv_bits`` dict (the ``CompressionPlan`` family), for
+    callers that want the plan entries without the findings."""
+    bits, _, _ = infer_kv_widths(cfg, params=params, floor_bits=floor_bits)
+    return bits

@@ -1,0 +1,225 @@
+"""Pass 2: packed-dispatch lint — prove every planned leaf stays fused.
+
+The packed-weight performance story collapses silently: a spec tweak in
+``models/layers.py`` or a new call site can drop a ``PackedTensor`` onto
+the materialized (unpack-then-XLA) path or a bare-decode fallback, and
+nothing fails — the numbers are identical, only the weight-read bytes
+triple. The kernels already record every trace-time dispatch decision
+(``kernels.ops.DISPATCH_RECORDS`` / ``FALLBACK_RECORDS``); this pass
+traces the *real* entry points — ``decode_step``, ``prefill_step``,
+``verify_step``, and the packed-master train body
+(``lm.loss(st_tree(packed, masters), batch)``) — with the plan's packed
+params, diffs the record streams around the trace, and turns the diff
+into findings:
+
+* any new **fallback** record is an error (with the recorded spec,
+  shape, and reason, plus the candidate plan leaves whose shape/width
+  match);
+* any new **materialized** (``unpack``) record of rank >= 2 whose
+  (shape, bits) matches a planned leaf is an error — a planned weight
+  was decoded wholesale instead of streamed through a fused kernel
+  (rank-1 records are the benign per-layer norm scales a scan slices
+  out of their stacked ``(L, d)`` leaves);
+* every planned leaf must have a positive **fused** proof: a
+  ``packed_matmul`` / ``packed_matmul_batched`` / ``take_rows`` record
+  matching its payload or logical shape (stacked leaves match with the
+  leading layer axis stripped, since the scan slices them). Matching is
+  at shape-class granularity — the call site does not know leaf paths,
+  so two same-shape same-width leaves are proven by either's record;
+  the finding lists every unproven leaf explicitly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.analysis.report import Finding
+from repro.core.compress import path_str, repack, uniform_plan
+from repro.core.tensor_store import PackedTensor, is_packed, st_tree
+from repro.kernels import ops as kops
+
+_FUSED_OPS = ("packed_matmul", "packed_matmul_batched", "take_rows")
+
+
+def _packed_leaves(tree: Any) -> Dict[str, PackedTensor]:
+    out: Dict[str, PackedTensor] = {}
+
+    def visit(path, leaf):
+        if is_packed(leaf):
+            out[path_str(path)] = leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree, is_leaf=is_packed)
+    return out
+
+
+def _shape_classes(pk: PackedTensor) -> Tuple[Tuple[int, ...], ...]:
+    """The shapes under which this leaf's dispatch records can appear:
+    payload words / logical, whole or with the stacked layer axis
+    stripped (the decode scan slices stacked leaves per layer)."""
+    data = tuple(pk.data.shape)
+    logical = tuple(pk.logical_shape)
+    out = [data, logical]
+    if len(data) >= 3:
+        out.append(data[1:])
+    if len(logical) >= 3:
+        out.append(logical[1:])
+    return tuple(out)
+
+
+def _train_batch(cfg, batch_size: int, seq_len: int) -> Dict[str, Any]:
+    from repro.core.calibrate import _extra_inputs
+    batch = {
+        "tokens": jnp.zeros((batch_size, seq_len), jnp.int32),
+        "labels": jnp.zeros((batch_size, seq_len), jnp.int32),
+    }
+    batch.update(_extra_inputs(cfg, batch_size))
+    return batch
+
+
+def trace_entry_points(cfg, packed, masters, batch_size: int = 1,
+                       seq_len: int = 32,
+                       ) -> Tuple[List[str], List[Finding]]:
+    """Trace each real entry point with the packed params; returns the
+    entry-point names traced plus info findings for any skipped.
+    Tracing (``jax.make_jaxpr``) is what fires the trace-time dispatch
+    records — nothing executes."""
+    from repro.models.lm import LM
+    lm = LM(cfg)
+    traced: List[str] = []
+    notes: List[Finding] = []
+    tokens1 = jnp.zeros((batch_size, 1), jnp.int32)
+    tokens4 = jnp.zeros((batch_size, 4), jnp.int32)
+    n_valid = jnp.full((batch_size,), 4, jnp.int32)
+    state = lm.init_decode_state(batch_size, seq_len, abstract=True)
+
+    entry_points = (
+        ("decode_step",
+         lambda: jax.make_jaxpr(lm.decode_step)(packed, state, tokens1)),
+        ("prefill_step",
+         lambda: jax.make_jaxpr(lm.prefill_step)(
+             packed, state, tokens4, n_valid)),
+        ("verify_step",
+         lambda: jax.make_jaxpr(lm.verify_step)(packed, state, tokens4)),
+        ("train_loss",
+         lambda: jax.make_jaxpr(
+             lambda pk, ms, b: lm.loss(st_tree(pk, ms), b))(
+                 packed, masters, _train_batch(cfg, batch_size, seq_len))),
+    )
+    for name, thunk in entry_points:
+        try:
+            thunk()
+            traced.append(name)
+        except NotImplementedError as e:
+            notes.append(Finding(
+                check="dispatch", severity="info", path=name,
+                message=f"entry point {name} unsupported for family "
+                        f"{cfg.family!r}: {e}"))
+        except Exception as e:                 # noqa: BLE001 — lint must
+            # keep auditing the other entry points; the failure itself
+            # is a (non-gating) warning with the trace error attached
+            notes.append(Finding(
+                check="dispatch", severity="warning", path=name,
+                message=f"tracing {name} failed: {type(e).__name__}: {e}"))
+    return traced, notes
+
+
+def lint_dispatch(cfg, plan=None, params: Optional[Dict] = None,
+                  batch_size: int = 1, seq_len: int = 32,
+                  extra_trace=None,
+                  ) -> Tuple[List[Finding], List[str]]:
+    """Run the dispatch lint; returns ``(findings, traced entry points)``.
+
+    ``extra_trace`` (a thunk) runs inside the record-diff window, after
+    the snapshot — the hook the CI negative leg uses to seed a known-bad
+    dispatch that the lint must then catch."""
+    findings: List[Finding] = []
+    if params is None:
+        from repro.models.lm import LM
+        params = LM(cfg).init(compat.prng_key(0))
+    if plan is None or not plan.float_bits:
+        plan = uniform_plan(params, cfg.resolved_weight_bits)
+    packed = repack(params, plan)
+    leaves = _packed_leaves(packed)
+
+    n_d, n_f = len(kops.DISPATCH_RECORDS), len(kops.FALLBACK_RECORDS)
+    if extra_trace is not None:
+        extra_trace()
+    traced, notes = trace_entry_points(cfg, packed, params,
+                                       batch_size, seq_len)
+    findings.extend(notes)
+    new_dispatch = list(kops.DISPATCH_RECORDS)[n_d:]
+    new_fallback = list(kops.FALLBACK_RECORDS)[n_f:]
+
+    # -- fallbacks: always errors -------------------------------------------
+    for rec in new_fallback:
+        cands = [p for p, pk in leaves.items()
+                 if pk.bits == rec.bits
+                 and tuple(rec.shape) in _shape_classes(pk)]
+        findings.append(Finding(
+            check="dispatch", severity="error", path=";".join(cands),
+            message=(
+                f"packed operand fell off the fused path in {rec.op} "
+                f"(reason={rec.reason or 'unknown'}, spec={rec.spec!r}, "
+                f"shape={tuple(rec.shape)}, bits={rec.bits}); candidate "
+                f"leaves: {cands or '<no planned leaf matches>'}"),
+            detail={"op": rec.op, "spec": rec.spec,
+                    "shape": list(rec.shape), "bits": rec.bits,
+                    "reason": rec.reason, "candidates": cands},
+        ))
+
+    # -- wholesale materialization of a planned leaf ------------------------
+    for rec in new_dispatch:
+        if rec.op != "unpack" or len(rec.shape) < 2:
+            continue
+        cands = [p for p, pk in leaves.items()
+                 if pk.bits == rec.bits
+                 and tuple(rec.shape) in _shape_classes(pk)]
+        if cands:
+            findings.append(Finding(
+                check="dispatch", severity="error", path=";".join(cands),
+                message=(
+                    f"planned leaf decoded wholesale (materialized unpack, "
+                    f"shape={tuple(rec.shape)}, bits={rec.bits}) instead "
+                    f"of a fused kernel; candidate leaves: {cands}"),
+                detail={"shape": list(rec.shape), "bits": rec.bits,
+                        "candidates": cands},
+            ))
+
+    # -- positive fused proof per planned leaf ------------------------------
+    # Exempt vector-class leaves: a stacked (L, d) norm scale under a
+    # ``*blocks/`` stack is consumed as rank-1 slices inside the layer
+    # scan — there is no matmul to fuse, and its rank-1 unpack records
+    # are the benign per-layer decode. Every real weight matrix under a
+    # stack is rank 3 (stacked on L); top-level rank-2 leaves (embed,
+    # lm_head) still need their fused/take proof.
+    fused = [(r, tuple(r.shape)) for r in new_dispatch
+             if r.op in _FUSED_OPS]
+    for path, pk in sorted(leaves.items()):
+        if (path.split("/", 1)[0].endswith("blocks")
+                and len(pk.logical_shape) == 2):
+            continue
+        classes = _shape_classes(pk)
+        if not any(r.bits == pk.bits and shp in classes
+                   for r, shp in fused):
+            findings.append(Finding(
+                check="dispatch", severity="error", path=path,
+                message=(
+                    f"no fused-kernel dispatch proves planned leaf {path} "
+                    f"(logical shape {tuple(pk.logical_shape)}, "
+                    f"AF{pk.bits}) across "
+                    f"{'/'.join(traced) or 'no traced entry points'}"),
+                detail={"logical_shape": list(pk.logical_shape),
+                        "bits": pk.bits, "traced": traced},
+            ))
+    if all(f.severity == "info" for f in findings):
+        findings.append(Finding(
+            check="dispatch", severity="info",
+            message=(
+                f"all {len(leaves)} planned leaves proven fused across "
+                f"{'/'.join(traced)} "
+                f"({len(fused)} fused dispatch records)"),
+        ))
+    return findings, traced

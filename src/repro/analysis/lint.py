@@ -1,0 +1,167 @@
+"""CI lint gate: run the four static passes over one architecture.
+
+    python -m repro.analysis.lint --arch qwen3_8b [--reduced] \
+        [--plan plan.json] [--out report.json] [--max-seq-len N] \
+        [--emit-kv-plan kv_plan.json] [--inject-fallback]
+
+Exit status is the contract: 0 when no pass raised an ``error``
+finding, 1 otherwise — warnings and info lines never gate. The report
+(``--out``) is the archived artifact ``python -m repro.obs.validate
+--lint`` checks; counts are also mirrored into the obs registry
+(``lint_findings_total``) so an in-process caller sees lint results
+through the same counters as serving/training telemetry.
+
+``--inject-fallback`` deliberately dispatches one packed leaf through
+an unrecognized einsum spec before linting — the seeded-failure leg of
+the CI gate, proving the dispatch pass actually fails when a packed
+operand leaves the fused path (a lint that cannot fail proves nothing).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+from repro import compat
+from repro.analysis.activations import infer_kv_widths
+from repro.analysis.dispatch import lint_dispatch
+from repro.analysis.report import Finding, LintReport
+from repro.analysis.sharding_lint import lint_donation, lint_sharding
+from repro.analysis.soundness import lint_plan
+from repro.core.compress import CompressionPlan, repack, uniform_plan
+
+
+def run_lint(cfg, arch: str, plan=None, max_seq_len: int = 256,
+             inject_fallback: bool = False) -> LintReport:
+    """All four passes over one config; plan defaults to uniform at the
+    config width (the serving default)."""
+    from repro.models.lm import LM
+
+    report = LintReport(arch=arch)
+    params = LM(cfg).init(compat.prng_key(0))
+
+    # pass 1: activation ranges -> per-layer KV widths
+    kv_bits, kv_bounds, findings = infer_kv_widths(cfg, params=params)
+    report.kv_bits, report.kv_bounds = kv_bits, kv_bounds
+    report.extend(findings)
+    report.passes.append("activation_width")
+
+    # pass 3 runs *first*: plan soundness (the explicit plan if given,
+    # else the default uniform plan + the pass-1 KV entries) — its
+    # verdicts decide what the trace-based passes may safely repack
+    checked = plan
+    if checked is None:
+        checked = uniform_plan(params, cfg.resolved_weight_bits)
+        checked = dataclasses.replace(checked, kv_bits=dict(kv_bits))
+    report.extend(lint_plan(cfg, checked, params=params,
+                            max_seq_len=max_seq_len,
+                            kv_bounds=kv_bounds))
+    report.passes.append("plan_soundness")
+
+    # off-ladder entries have no decode network: drop them before the
+    # trace passes repack (they are already errors above)
+    safe_plan = plan
+    if plan is not None:
+        from repro.core.formats import FLOAT_FORMATS
+        safe_plan = dataclasses.replace(plan, float_bits={
+            k: v for k, v in plan.float_bits.items()
+            if v in FLOAT_FORMATS})
+
+    # pass 2: packed-dispatch proof over the traced entry points (the
+    # seeded fallback, if any, fires inside the record-diff window)
+    extra = ((lambda: _inject_fallback(cfg, params))
+             if inject_fallback else None)
+    findings, traced = lint_dispatch(cfg, plan=safe_plan, params=params,
+                                     extra_trace=extra)
+    report.extend(findings)
+    report.passes.append("dispatch")
+
+    # pass 4: sharding + donation
+    report.extend(lint_sharding(cfg, plan=safe_plan, params=params))
+    report.passes.append("sharding")
+    report.extend(lint_donation(cfg, params=params))
+    report.passes.append("donation")
+
+    report.mirror_to_obs()
+    return report
+
+
+def _inject_fallback(cfg, params) -> None:
+    """Seeded failure: push one packed leaf through an einsum spec the
+    fused dispatcher does not recognize, so the fallback recorder fires
+    inside the lint window."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.tensor_store import is_packed
+    from repro.models import layers as L
+
+    plan = uniform_plan(params, cfg.resolved_weight_bits)
+    packed = repack(params, plan)
+    leaf = next(w for w in jax.tree_util.tree_leaves(
+        packed, is_leaf=is_packed)
+        if is_packed(w) and len(w.logical_shape) >= 3)
+    w2 = jax.tree_util.tree_map(lambda a: a[0], leaf)
+    a, b = w2.logical_shape
+
+    def bad(x):
+        # "...b,ab->...a" is a valid einsum but contracts the weight's
+        # *second* axis — not the plain matmul the fused kernel computes
+        return L.linear(x, w2, spec="...b,ab->...a")
+
+    jax.make_jaxpr(bad)(jnp.zeros((1, b), jnp.float32))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="lint the smoke-scale config (default; full "
+                         "scale only changes trace sizes, not verdicts)")
+    ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
+                    help="verify this calibrated plan instead of the "
+                         "uniform default")
+    ap.add_argument("--out", default=None, metavar="REPORT_JSON",
+                    help="write the lint report artifact here")
+    ap.add_argument("--max-seq-len", type=int, default=256,
+                    help="deployment bound seeding the int-stream proofs")
+    ap.add_argument("--emit-kv-plan", default=None, metavar="OUT_JSON",
+                    help="also write a CompressionPlan JSON carrying the "
+                         "statically inferred per-layer kv_bits")
+    ap.add_argument("--inject-fallback", action="store_true",
+                    help="seed an unfused dispatch before linting (CI "
+                         "negative leg: the lint must fail)")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    plan = CompressionPlan.load(args.plan) if args.plan else None
+    report = run_lint(cfg, args.arch, plan=plan,
+                      max_seq_len=args.max_seq_len,
+                      inject_fallback=args.inject_fallback)
+
+    if args.emit_kv_plan:
+        kv_plan = plan or CompressionPlan(float_bits={}, int_bits={})
+        kv_plan = dataclasses.replace(kv_plan,
+                                      kv_bits=dict(report.kv_bits))
+        kv_plan.save(args.emit_kv_plan)
+    if args.out:
+        report.save(args.out)
+
+    for f in report.findings:
+        stream = sys.stderr if f.severity == "error" else sys.stdout
+        loc = f" [{f.path}]" if f.path else ""
+        print(f"{f.severity.upper()} {f.check}{loc}: {f.message}",
+              file=stream)
+    n_err = len(report.errors)
+    verdict = "clean" if report.clean else f"{n_err} error(s)"
+    print(f"{args.arch}: lint {verdict} across "
+          f"{'/'.join(report.passes)} ({len(report.findings)} findings)")
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

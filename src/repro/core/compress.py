@@ -183,11 +183,19 @@ class CompressionPlan:
 
     ``float_bits``: leaf-path string -> Table 3 width.
     ``int_bits``:   leaf-path string -> (bits rounded to slices, signed).
+    ``kv_bits``:    ``"kv/layer_{i}"`` -> Table 3 width for that layer's
+    KV-cache rows — the activation-width family emitted by the static
+    analysis pass (``repro.analysis``), consumed by
+    ``init_decode_state`` / paged pool allocation and the serving bytes
+    accounting. A separate namespace from the weight families: KV widths
+    describe runtime activations, not stored leaves, so ``bits_of``
+    never consults them.
     """
 
     float_bits: Dict[str, int]
     int_bits: Dict[str, Tuple[int, bool]]
     tune_evals: int = 0
+    kv_bits: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def bits_of(self, path: Tuple[Any, ...], leaf):
         """Packing spec for one leaf: a bare width for floats, a
@@ -233,6 +241,15 @@ class CompressionPlan:
             return num / max(den, 1)
         return sum(self.float_bits.values()) / len(self.float_bits)
 
+    def kv_layer_widths(self, n_layers: int, default: int) -> Tuple[int, ...]:
+        """Per-layer KV widths as a dense tuple: ``kv_bits["kv/layer_i"]``
+        where present, ``default`` (normally the config's uniform width)
+        for layers the plan does not name."""
+        return tuple(
+            int(self.kv_bits.get(f"kv/layer_{i}", default))
+            for i in range(n_layers)
+        )
+
     # -- JSON codec (plan files + checkpoint manifests) ------------------
 
     def to_jsonable(self) -> Dict[str, Any]:
@@ -246,6 +263,8 @@ class CompressionPlan:
             "int_bits": {k: [int(b), bool(s)] for k, (b, s) in
                          sorted(self.int_bits.items())},
             "tune_evals": int(self.tune_evals),
+            "kv_bits": {k: int(v) for k, v in
+                        sorted(self.kv_bits.items())},
         }
 
     @classmethod
@@ -261,6 +280,8 @@ class CompressionPlan:
             int_bits={k: (int(v[0]), bool(v[1])) for k, v in
                       obj.get("int_bits", {}).items()},
             tune_evals=int(obj.get("tune_evals", 0)),
+            kv_bits={k: int(v) for k, v in
+                     obj.get("kv_bits", {}).items()},
         )
 
     def save(self, path: str) -> None:
@@ -351,8 +372,13 @@ def derive_plan(plan: CompressionPlan, delta_bits: int = 4) -> CompressionPlan:
     """Derive the *draft* plan: every float leaf steps ``delta_bits`` down
     the Table 3 ladder (snapped to the widest rung <= width - delta_bits,
     floored at the narrowest rung) without re-running precision tuning.
-    Integer widths come from range analysis and are exact — narrowing them
-    would corrupt values, so they are carried over unchanged.
+    The three families step independently: weight floats by
+    ``delta_bits``; per-layer ``kv_bits`` entries always one rung down
+    (the draft-KV ladder contract, matching the scalar
+    ``resolve_draft_kv_bits`` default) and never below AF8 — that is the
+    narrowest Table 3 rung, so ``ladder_snap``'s floor enforces it;
+    integer widths come from range analysis and are exact — narrowing
+    them would corrupt values, so they are carried over unchanged.
 
     The result never aliases the source plan's mutable state: even when
     every leaf is already at the AF8 floor (or ``delta_bits == 0``) the
@@ -365,10 +391,15 @@ def derive_plan(plan: CompressionPlan, delta_bits: int = 4) -> CompressionPlan:
         key: ladder_snap(bits - delta_bits)
         for key, bits in plan.float_bits.items()
     }
+    new_kv: Dict[str, int] = {
+        key: ladder_snap(bits, below=True)
+        for key, bits in plan.kv_bits.items()
+    }
     return CompressionPlan(
         float_bits=new_floats,
         int_bits=dict(plan.int_bits),
         tune_evals=plan.tune_evals,
+        kv_bits=new_kv,
     )
 
 

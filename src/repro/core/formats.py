@@ -45,6 +45,16 @@ class FloatFormat:
         return (1 << self.exp_bits) - 1
 
     @property
+    def max_finite(self) -> float:
+        """Largest finite magnitude the format represents: the overflow
+        threshold the static activation-width analysis proves bounds
+        against (a planned width whose max_finite is below a value's
+        proven magnitude bound would silently clip to inf)."""
+        m = self.mantissa_bits
+        return float((2.0 - 2.0 ** -m) * 2.0 ** (self.max_biased_exp - 1
+                                                 - self.bias))
+
+    @property
     def slices(self) -> int:
         return slices_for_bits(self.total_bits)
 

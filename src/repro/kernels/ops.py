@@ -8,8 +8,9 @@ construction — the kernels reuse the oracle's bit manipulation.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +54,51 @@ def set_backend(mode: str) -> None:
     BACKEND = KernelBackend(mode)
 
 
-def record_dispatch(op: str, path: str, packed_bytes: int = 0) -> None:
+@dataclasses.dataclass(frozen=True)
+class DispatchRecord:
+    """One structured trace-time dispatch (or fallback) decision.
+
+    The static linter (``repro.analysis``) queries these to prove every
+    planned leaf hit a fused kernel — and, for fallbacks, to report
+    *which* spec/shape fell off the fused path instead of today's
+    warn-once. The leaf path is not known at the kernel call site (the
+    models pass bare arrays); records carry the logical shape/width so
+    the linter resolves candidate leaf paths by matching them against
+    the plan."""
+
+    op: str                               # packed_matmul | unpack | ...
+    path: str                             # fused | materialized | ...
+    shape: Tuple[int, ...] = ()           # logical operand shape
+    bits: int = 0                         # packed width (0 = unpacked)
+    spec: str = ""                        # normalized einsum spec, if any
+    reason: str = ""                      # fallbacks: why it fell off
+
+
+# Bounded trace-time record streams. Like the dispatch counters these
+# grow only when a new program is traced (cached jit re-executions do not
+# re-dispatch), but deques keep a long-lived process with many traced
+# shapes bounded anyway. The linter snapshots + diffs them around its
+# own tracing, so a maxlen eviction can only drop *other* programs'
+# records, never the ones inside the lint window.
+DISPATCH_RECORDS: collections.deque = collections.deque(maxlen=4096)
+FALLBACK_RECORDS: collections.deque = collections.deque(maxlen=4096)
+
+
+def record_fallback(op: str, spec: str = "", shape: Tuple[int, ...] = (),
+                    bits: int = 0, reason: str = "") -> None:
+    """A packed operand leaving the fused path: structurally recorded
+    (queryable by the linter) and counted with a reason label."""
+    FALLBACK_RECORDS.append(DispatchRecord(
+        op=op, path="fallback", shape=tuple(int(s) for s in shape),
+        bits=int(bits), spec=spec, reason=reason))
+    obs.REGISTRY.counter(
+        "kernel_fallback_total",
+        "Packed operands that fell off the fused path (trace-time).",
+    ).inc(1, op=op, reason=reason or "unknown")
+
+
+def record_dispatch(op: str, path: str, packed_bytes: int = 0,
+                    shape: Tuple[int, ...] = (), bits: int = 0) -> None:
     """Dispatch telemetry: one count (and the packed operand's analytic
     weight-read bytes) per *dispatch decision*, labeled by path — fused,
     fused_batched, materialized, fallback, take, kv_decode. These
@@ -62,6 +107,9 @@ def record_dispatch(op: str, path: str, packed_bytes: int = 0) -> None:
     compiled program took (the bench-only fused-vs-materialized split as
     a live metric), while per-execution byte accounting lives with the
     callers that count executions (ServeEngine/Trainer)."""
+    DISPATCH_RECORDS.append(DispatchRecord(
+        op=op, path=path, shape=tuple(int(s) for s in shape),
+        bits=int(bits)))
     obs.REGISTRY.counter(
         "kernel_dispatch_total",
         "Kernel dispatch decisions by op and path (trace-time).",
@@ -74,7 +122,8 @@ def record_dispatch(op: str, path: str, packed_bytes: int = 0) -> None:
 
 
 def unpack(packed, bits: int, n: int, out_dtype=jnp.float32):
-    record_dispatch("unpack", "materialized", packed.size * 4)
+    record_dispatch("unpack", "materialized", packed.size * 4,
+                    shape=packed.shape[:-1] + (n,), bits=bits)
     if BACKEND.use_pallas and packed.ndim == 2:
         from repro.kernels.unpack import unpack as _k
         return _k(packed, bits, n, out_dtype, interpret=BACKEND.interpret)
@@ -95,7 +144,8 @@ def take_rows(packed, indices, bits: int, n: int, kind: str = "float",
     gathered rows (the packed ``embed`` path). On the Pallas backends each
     row is DMA'd by a scalar-prefetched index and decoded in VMEM; the
     jnp oracle is the same gather+decode in XLA."""
-    record_dispatch("take_rows", "take")
+    record_dispatch("take_rows", "take",
+                    shape=packed.shape[:-1] + (n,), bits=bits)
     if BACKEND.use_pallas and packed.ndim == 2 and indices.ndim == 1:
         from repro.kernels.take import take_rows as _k
         return _k(packed, indices, bits, n, kind=kind, signed=signed,
@@ -108,7 +158,8 @@ def packed_matmul(x, w_packed, bits: int, n: int, transpose: bool = False):
     """Fused unpack+matmul (the models' packed-weight hot path). The
     kernel flattens leading batch dims itself; ``transpose`` selects
     contraction over the packed axis (tied ``unembed``)."""
-    record_dispatch("packed_matmul", "fused", w_packed.size * 4)
+    record_dispatch("packed_matmul", "fused", w_packed.size * 4,
+                    shape=w_packed.shape, bits=bits)
     if BACKEND.use_pallas:
         from repro.kernels.packed_matmul import packed_matmul as _k
         return _k(x, w_packed, bits, n, transpose=transpose,
@@ -122,7 +173,7 @@ def packed_matmul_batched(x, w_packed, bits: int, n: int,
     hot path): x (E, C, K), w_packed (E, K, n*bits/32) uint32 (or
     (E, n, K*bits/32) when ``transpose``) -> (E, C, n)."""
     record_dispatch("packed_matmul_batched", "fused_batched",
-                    w_packed.size * 4)
+                    w_packed.size * 4, shape=w_packed.shape, bits=bits)
     if BACKEND.use_pallas:
         from repro.kernels.packed_matmul import (
             packed_matmul_batched as _k,
@@ -145,7 +196,8 @@ def packed_matmul_dw(x, g, transpose: bool = False, batched: bool = False):
 
 def kv_decode(q, k_packed, v_packed, kv_len, bits: int, d: int):
     record_dispatch("kv_decode", "kv_decode",
-                    (k_packed.size + v_packed.size) * 4)
+                    (k_packed.size + v_packed.size) * 4,
+                    shape=k_packed.shape, bits=bits)
     if BACKEND.use_pallas:
         from repro.kernels.kv_decode import kv_decode as _k
         return _k(q, k_packed, v_packed, kv_len, bits, d,

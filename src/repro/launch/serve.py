@@ -105,7 +105,8 @@ def main() -> None:
     if args.plan:
         plan = CompressionPlan.load(args.plan)
         print(f"loaded plan {args.plan}: {len(plan.float_bits)} float "
-              f"leaves, {len(plan.int_bits)} int streams")
+              f"leaves, {len(plan.int_bits)} int streams, "
+              f"{len(plan.kv_bits)} KV layers")
     elif args.calibrate:
         from repro.core.calibrate import calibrate
         from repro.core.quality import QualitySpec

@@ -94,15 +94,22 @@ def attention_decode(
     p: Dict, x: jnp.ndarray, cfg: ModelConfig,
     state: Dict, positions: jnp.ndarray,
     window: int = 0, cross: bool = False,
+    kv_bits_override: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, Dict]:
-    """x: (B, 1, d). state: {k, v, len} (self) or {ck, cv, clen} (cross)."""
+    """x: (B, 1, d). state: {k, v, len} (self) or {ck, cv, clen} (cross).
+
+    ``kv_bits_override`` pins the packed-KV width for this call — the
+    width-segmented decode path passes each segment's static width so
+    mixed per-layer plans (``CompressionConfig.kv_layer_bits``) pack each
+    layer run at its own rung; ``None`` reads the uniform config knob."""
     b, _, d = x.shape
     hd, h, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
     xn = L.rms_norm(x, p["ln"])
     q = L.linear(xn, p["wq"]).reshape(b, 1, h, hd)
     if cfg.qk_norm:
         q = L.rms_norm(q, p["q_norm"])
-    kv_bits = cfg.compression.kv_bits
+    kv_bits = (kv_bits_override if kv_bits_override is not None
+               else cfg.compression.kv_bits)
     if cross:
         o = decode_attention(
             q[:, 0], state["ck"], state["cv"], state["clen"], kv_bits

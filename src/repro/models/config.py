@@ -44,6 +44,13 @@ class CompressionConfig:
     # same way narrower draft weights do — and like them it only moves
     # the acceptance rate, never the emitted tokens.
     draft_kv_bits: Optional[int] = None
+    # per-layer KV widths from the static activation-width analysis
+    # (``CompressionPlan.kv_bits``), one entry per KV-carrying layer.
+    # None = uniform at ``kv_bits``. When set, ``kv_bits`` must hold the
+    # max of the tuple (allocation paths that need a single width — e.g.
+    # the residency planner's worst case — read it); the decode state
+    # segments layers by contiguous equal widths.
+    kv_layer_bits: Optional[Tuple[int, ...]] = None
 
     @property
     def any_packing(self) -> bool:
@@ -141,6 +148,40 @@ class ModelConfig:
         return self.compression.kv_bits or 16
 
     @property
+    def n_kv_layers(self) -> int:
+        """Layers that carry a per-token KV (or decode-attention) cache —
+        the length a ``kv_layer_bits`` tuple must have."""
+        if self.family == "ssm":
+            return 0
+        if self.family == "hybrid":
+            groups = self.n_layers // (self.pattern_rec + self.pattern_attn)
+            return groups * self.pattern_attn
+        return self.n_layers
+
+    @property
+    def resolved_kv_layer_bits(self) -> Tuple[int, ...]:
+        """Per-layer KV widths for bytes accounting: the explicit
+        ``kv_layer_bits`` tuple when the analysis emitted one, else
+        ``resolved_kv_bits`` broadcast over every KV layer."""
+        if self.compression.kv_layer_bits is not None:
+            return tuple(self.compression.kv_layer_bits)
+        return (self.resolved_kv_bits,) * self.n_kv_layers
+
+    def kv_segments(self) -> Tuple[Tuple[int, int, int], ...]:
+        """Contiguous equal-width layer runs as ``(start, end, bits)``
+        half-open spans — the static segmentation the decode state and
+        the per-segment decode scans share. A uniform config yields one
+        segment covering every KV layer (the single-scan fast path)."""
+        widths = self.resolved_kv_layer_bits
+        segs = []
+        for i, b in enumerate(widths):
+            if segs and segs[-1][2] == b:
+                segs[-1] = (segs[-1][0], i + 1, b)
+            else:
+                segs.append((i, i + 1, b))
+        return tuple(segs)
+
+    @property
     def resolved_weight_bits(self) -> int:
         """Bits per weight element for bytes accounting and for packing
         at the planned width: the configured width, else 16 (bf16)."""
@@ -205,19 +246,28 @@ class ModelConfig:
         return self.n_layers * per_layer + emb
 
     def kv_bytes_per_token(self, bits: Optional[int] = None) -> int:
-        """KV-cache (or state) bytes per token at the given packing."""
-        b = bits or self.resolved_kv_bits
+        """KV-cache (or state) bytes per token at the given packing.
+        With no explicit ``bits`` and a per-layer ``kv_layer_bits``
+        tuple, each layer contributes at its own width (mixed-width
+        accounting); an explicit ``bits`` forces the uniform formula."""
         hd = self.resolved_head_dim
         if self.family == "ssm":
             return 0                # state is O(1) in sequence length
+        row = 2 * self.n_kv_heads * hd
+        if bits is None and self.compression.kv_layer_bits is not None:
+            total = sum(row * b for b in self.resolved_kv_layer_bits)
+            if self.family == "encdec":
+                # cross-KV mirrors the decoder stack (dense-regioned,
+                # same widths)
+                total *= 2
+            return total // 8
+        b = bits or self.resolved_kv_bits
         if self.family == "hybrid":
-            groups = self.n_layers // (self.pattern_rec + self.pattern_attn)
-            n_attn = groups * self.pattern_attn
-            return n_attn * 2 * self.n_kv_heads * hd * b // 8
+            return self.n_kv_layers * row * b // 8
         layers = self.n_layers + (
             self.n_layers if self.family == "encdec" else 0
         )
-        return layers * 2 * self.n_kv_heads * hd * b // 8
+        return layers * row * b // 8
 
     def reduced(self) -> "ModelConfig":
         """Same-family tiny variant for CPU smoke tests."""

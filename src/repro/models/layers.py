@@ -78,12 +78,15 @@ def unpack_maybe(w, dtype=None):
     """
     if is_st(w):
         kops.record_dispatch("unpack_maybe", "materialized",
-                             w.packed.data.size * 4)
+                             w.packed.data.size * 4,
+                             shape=w.packed.logical_shape,
+                             bits=w.packed.bits)
         x = _st_decode(w)
         return x.astype(dtype) if dtype is not None else x
     if is_packed(w):
         kops.record_dispatch("unpack_maybe", "materialized",
-                             w.data.size * 4)
+                             w.data.size * 4,
+                             shape=w.logical_shape, bits=w.bits)
         x = w.unpack()
         return x.astype(dtype) if dtype is not None else x
     return w if dtype is None else w.astype(dtype)
@@ -136,6 +139,23 @@ def _warn_unfused_spec(spec: str) -> None:
         "unpack path (weight-read savings lost for this op)",
         stacklevel=3,
     )
+
+
+def _record_unfused(op: str, spec: str, w, reason: str) -> None:
+    """A packed weight falling off the fused path: *every* occurrence is
+    structurally recorded (leaf shape, normalized spec, packed width,
+    reason) for the static linter and the ``kernel_fallback_total``
+    counter — the human-facing warning stays once-per-spec, but the
+    record stream never dedups, so a packed weight can no longer ride
+    the slow path invisibly after the first warning."""
+    pk = w.packed if is_st(w) else w
+    nspec = _normalize_spec(spec)
+    kops.record_fallback(
+        op, spec=nspec,
+        shape=pk.logical_shape if is_packed(pk) else getattr(
+            pk, "shape", ()),
+        bits=getattr(pk, "bits", 0), reason=reason)
+    _warn_unfused_spec(nspec)
 
 
 def _fused_dx(data, bits, kdim, transpose, g):
@@ -220,11 +240,11 @@ def linear(x: jnp.ndarray, w, spec: str = "...d,df->...f",
         if _fusable(w.packed):
             if _plain_matmul_spec(spec):
                 return st_linear(x, w.packed, w.master)
-            _warn_unfused_spec(_normalize_spec(spec))
+            _record_unfused("linear", spec, w, "unrecognized_spec")
     elif _fusable(w) and not fallback:
         if _plain_matmul_spec(spec):
             return _packed_matmul(x, w, transpose=False)
-        _warn_unfused_spec(_normalize_spec(spec))
+        _record_unfused("linear", spec, w, "unrecognized_spec")
     if fallback and (is_st(w) or is_packed(w)):
         kops.record_dispatch("linear", "fallback")
     w = unpack_maybe(w, x.dtype)

@@ -333,9 +333,52 @@ class LM:
         return self.logits_fn(params, h[:, -1:]), {}
 
     # --------------------------------------------------------------- decode
+    def _kv_segment_layout(self):
+        """Validated ``kv_segments()`` when the config carries per-layer
+        KV widths, else ``None`` (the uniform single-buffer layout).
+
+        Pack widths must be compile-time constants (the bitpack shift
+        networks are Python loops), so mixed per-layer plans execute as
+        one buffer + one scan per contiguous equal-width layer run. Only
+        row-cache families whose decode is a single stacked scan segment;
+        recurrent and cross-attention families keep the uniform knob."""
+        cfg = self.cfg
+        klb = cfg.compression.kv_layer_bits
+        if klb is None:
+            return None
+        if cfg.family not in ("dense", "vlm", "moe"):
+            raise ValueError(
+                f"kv_layer_bits is only supported for dense/vlm/moe "
+                f"decode stacks, not family {cfg.family!r}"
+            )
+        if len(klb) != cfg.n_kv_layers:
+            raise ValueError(
+                f"kv_layer_bits has {len(klb)} entries for "
+                f"{cfg.n_kv_layers} KV layers"
+            )
+        if not cfg.compression.kv_bits:
+            raise ValueError(
+                "kv_layer_bits requires kv_bits (set it to the max "
+                "per-layer width; None means a dense, unpacked cache)"
+            )
+        if max(klb) != cfg.compression.kv_bits:
+            raise ValueError(
+                f"kv_bits ({cfg.compression.kv_bits}) must equal "
+                f"max(kv_layer_bits) = {max(klb)}"
+            )
+        return cfg.kv_segments()
+
     def init_decode_state(self, batch_size: int, seq_len: int,
                           abstract: bool = False) -> Dict:
-        """Zeroed per-layer decode state (stacked on L for the scan)."""
+        """Zeroed per-layer decode state (stacked on L for the scan).
+
+        With per-layer KV widths (``compression.kv_layer_bits``) the
+        ``kv`` entry is a *tuple* of segment dicts — one ``{"k", "v"}``
+        buffer per contiguous equal-width layer run, each packed at its
+        own width — instead of the single stacked dict. A uniform config
+        keeps the legacy single-dict layout (and the exact decode
+        program), which is what makes mixed-width support a pure
+        superset."""
         cfg = self.cfg
         kv_bits = cfg.compression.kv_bits
         hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
@@ -343,9 +386,9 @@ class LM:
         mk = (jax.ShapeDtypeStruct if abstract
               else (lambda sh, d: jnp.zeros(sh, d)))
 
-        def kv(layers, s):
-            if kv_bits:
-                w = _packed_kv_words(hd, kv_bits)
+        def kv(layers, s, bits=kv_bits):
+            if bits:
+                w = _packed_kv_words(hd, bits)
                 return {
                     "k": mk((layers, batch_size, s, hkv, w), jnp.uint32),
                     "v": mk((layers, batch_size, s, hkv, w), jnp.uint32),
@@ -355,12 +398,17 @@ class LM:
                 "v": mk((layers, batch_size, s, hkv, hd), dt),
             }
 
+        segs = self._kv_segment_layout()
         state: Dict[str, Any] = {
             "len": mk((batch_size,), jnp.int32),
         }
         fam = cfg.family
         if fam in ("dense", "vlm", "moe"):
-            state["kv"] = kv(cfg.n_layers, seq_len)
+            if segs is not None:
+                state["kv"] = tuple(
+                    kv(hi - lo, seq_len, bits) for lo, hi, bits in segs)
+            else:
+                state["kv"] = kv(cfg.n_layers, seq_len)
         elif fam == "ssm":
             state["conv"] = mk(
                 (cfg.n_layers, batch_size, cfg.d_conv - 1, cfg.d_inner), dt)
@@ -439,10 +487,10 @@ class LM:
         mk = (jax.ShapeDtypeStruct if abstract
               else (lambda sh, d: jnp.zeros(sh, d)))
 
-        def kv_pool(layers):
+        def kv_pool(layers, bits=kv_bits):
             p1 = n_pages + 1                      # + scrap page 0
-            if kv_bits:
-                w = _packed_kv_words(hd, kv_bits)
+            if bits:
+                w = _packed_kv_words(hd, bits)
                 return {
                     "k": mk((layers, p1, page_size, hkv, w), jnp.uint32),
                     "v": mk((layers, p1, page_size, hkv, w), jnp.uint32),
@@ -452,10 +500,12 @@ class LM:
                 "v": mk((layers, p1, page_size, hkv, hd), dt),
             }
 
+        segs = self._kv_segment_layout()
         state: Dict[str, Any] = {
             "len": mk((batch_size,), jnp.int32),
             "table": mk((batch_size, max_pages), jnp.int32),
-            "kv": kv_pool(cfg.n_layers),
+            "kv": (tuple(kv_pool(hi - lo, bits) for lo, hi, bits in segs)
+                   if segs is not None else kv_pool(cfg.n_layers)),
         }
         if cfg.family == "encdec":
             # the cross cache is prompt-scoped and fixed-length — per-slot
@@ -511,19 +561,37 @@ class LM:
             }
 
         if fam in ("dense", "vlm", "moe"):
-            def body(h, xs):
-                lp, kv = xs
-                kc, vc = kv_view(kv)
-                st = {"k": kc, "v": vc, "len": state["len"]}
-                h, st = B.attention_decode(lp["attn"], h, cfg, st, positions)
-                if fam == "moe":
-                    h = B.moe_apply(lp["moe"], h, cfg)
-                else:
-                    h = B.mlp_apply(lp["mlp"], h, cfg)
-                return h, kv_persist(kv, st)
-            x, new_kv = jax.lax.scan(body, x,
-                                     (params["blocks"], state["kv"]))
-            state = dict(state, kv=new_kv)
+            def body_at(bits):
+                def body(h, xs):
+                    lp, kv = xs
+                    kc, vc = kv_view(kv)
+                    st = {"k": kc, "v": vc, "len": state["len"]}
+                    h, st = B.attention_decode(lp["attn"], h, cfg, st,
+                                               positions,
+                                               kv_bits_override=bits)
+                    if fam == "moe":
+                        h = B.moe_apply(lp["moe"], h, cfg)
+                    else:
+                        h = B.mlp_apply(lp["mlp"], h, cfg)
+                    return h, kv_persist(kv, st)
+                return body
+            if isinstance(state["kv"], tuple):
+                # width-segmented cache: one scan per contiguous
+                # equal-width layer run, each at its own static pack
+                # width (bitpack shift networks need Python-int widths)
+                new_segs = []
+                for (lo, hi, bits), kv_seg in zip(
+                        cfg.kv_segments(), state["kv"]):
+                    blocks = compat.tree_map(
+                        lambda a, lo=lo, hi=hi: a[lo:hi], params["blocks"])
+                    x, new_kv = jax.lax.scan(
+                        body_at(bits), x, (blocks, kv_seg))
+                    new_segs.append(new_kv)
+                state = dict(state, kv=tuple(new_segs))
+            else:
+                x, new_kv = jax.lax.scan(body_at(None), x,
+                                         (params["blocks"], state["kv"]))
+                state = dict(state, kv=new_kv)
         elif fam == "ssm":
             def body(h, xs):
                 lp, st = xs

@@ -71,6 +71,19 @@ DRAIN_EXTRA_KEYS_ADAPTIVE = frozenset({"adaptive", "retune_events"})
 #: packed-master mode at log_every boundaries only)
 TRAIN_STEP_EVENT_KEYS = frozenset({"step", "loss", "step_time_s"})
 
+#: top-level keys of a ``repro.analysis`` lint report (schema v1) —
+#: the artifact ``python -m repro.obs.validate --lint`` checks and the
+#: CI gate archives per arch
+LINT_REPORT_KEYS = frozenset({
+    "version", "arch", "clean", "passes", "findings", "counters",
+    "kv_bits", "kv_bounds",
+})
+
+#: keys every serialized lint finding carries
+LINT_FINDING_KEYS = frozenset({
+    "check", "severity", "message", "path", "detail",
+})
+
 #: attrs of the final ``train.metrics`` event
 TRAIN_FINAL_KEYS = frozenset({
     "steps_completed", "last_step", "final_loss", "mean_step_time_s",
@@ -211,4 +224,60 @@ def validate_metrics_jsonl(path: str) -> Tuple[Dict[str, int], List[str]]:
             errors.append(
                 f"train.metrics missing keys: {sorted(missing)}")
         errors.extend(check_byte_parity(last_train))
+    return counts, errors
+
+
+def validate_lint_report(path: str) -> Tuple[Dict[str, int], List[str]]:
+    """Validate one ``repro.analysis.lint --out`` report artifact.
+
+    Checks the exact schema-v1 key set, the finding record shape, that
+    ``clean`` agrees with the findings (a report claiming clean while
+    carrying an error finding is itself a failure), and that ``counters``
+    matches a recount. Returns ``(counts, errors)`` like
+    ``validate_metrics_jsonl``."""
+    errors: List[str] = []
+    counts = {"findings": 0, "errors": 0, "warnings": 0, "infos": 0}
+    try:
+        with open(path) as f:
+            rep = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return counts, [f"cannot read {path}: {e}"]
+    if not isinstance(rep, dict):
+        return counts, ["lint report is not a JSON object"]
+    got = set(rep)
+    if got != LINT_REPORT_KEYS:
+        extra, missing = got - LINT_REPORT_KEYS, LINT_REPORT_KEYS - got
+        if missing:
+            errors.append(f"lint report missing keys: {sorted(missing)}")
+        if extra:
+            errors.append(f"lint report unexpected keys: {sorted(extra)}")
+        return counts, errors
+    if rep["version"] != 1:
+        errors.append(f"unknown lint report version {rep['version']!r}")
+    recount: Dict[str, int] = {}
+    n_err = 0
+    for i, f in enumerate(rep["findings"]):
+        if not isinstance(f, dict) or set(f) != LINT_FINDING_KEYS:
+            errors.append(f"finding {i}: wrong keys "
+                          f"{sorted(f) if isinstance(f, dict) else f}")
+            continue
+        counts["findings"] += 1
+        sev = f["severity"]
+        if sev not in ("error", "warning", "info"):
+            errors.append(f"finding {i}: unknown severity {sev!r}")
+            continue
+        counts[sev + "s"] += 1
+        n_err += sev == "error"
+        key = f"{f['check']}/{sev}"
+        recount[key] = recount.get(key, 0) + 1
+    if bool(rep["clean"]) != (n_err == 0):
+        errors.append(
+            f"clean={rep['clean']} but the report carries {n_err} "
+            "error finding(s)")
+    if rep["counters"] != recount:
+        errors.append(
+            f"counters {rep['counters']} disagree with a recount "
+            f"{recount}")
+    if not rep["passes"]:
+        errors.append("no passes recorded")
     return counts, errors

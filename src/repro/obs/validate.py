@@ -1,32 +1,46 @@
-"""CLI validator for ``--metrics-out`` JSONL streams.
+"""CLI validator for ``--metrics-out`` JSONL streams and lint reports.
 
     python -m repro.obs.validate metrics.jsonl [more.jsonl ...]
+    python -m repro.obs.validate --lint report.json [more.json ...]
 
 Exits nonzero when any stream is empty, malformed, schema-divergent, or
 fails the byte-accounting invariant — the CI gate for the instrumented
-serve smoke (``scripts/ci.sh``). All the actual checks live in
-``repro.obs.schema.validate_metrics_jsonl`` so tests and CI agree.
+serve smoke (``scripts/ci.sh``). ``--lint`` switches to the static-
+analysis report schema (``repro.analysis.lint --out`` artifacts): exact
+key set, finding shape, and internal consistency (``clean`` vs. the
+error findings, ``counters`` vs. a recount). All the actual checks live
+in ``repro.obs.schema`` so tests and CI agree.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
-from repro.obs.schema import validate_metrics_jsonl
+from repro.obs.schema import validate_lint_report, validate_metrics_jsonl
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("paths", nargs="+", metavar="METRICS_JSONL")
+    ap.add_argument("paths", nargs="+", metavar="PATH")
+    ap.add_argument("--lint", action="store_true",
+                    help="validate repro.analysis.lint report JSON "
+                         "artifacts instead of metrics JSONL streams")
     args = ap.parse_args()
 
     failed = 0
     for path in args.paths:
-        counts, errors = validate_metrics_jsonl(path)
-        status = "OK" if not errors else "FAIL"
-        print(f"{path}: {status} — {counts['records']} records "
-              f"({counts['spans']} spans, {counts['events']} events, "
-              f"{counts['metrics_events']} metrics events)")
+        if args.lint:
+            counts, errors = validate_lint_report(path)
+            status = "OK" if not errors else "FAIL"
+            print(f"{path}: {status} — {counts['findings']} findings "
+                  f"({counts['errors']} errors, {counts['warnings']} "
+                  f"warnings, {counts['infos']} infos)")
+        else:
+            counts, errors = validate_metrics_jsonl(path)
+            status = "OK" if not errors else "FAIL"
+            print(f"{path}: {status} — {counts['records']} records "
+                  f"({counts['spans']} spans, {counts['events']} events, "
+                  f"{counts['metrics_events']} metrics events)")
         for err in errors:
             print(f"  {err}", file=sys.stderr)
         failed += bool(errors)

@@ -51,6 +51,20 @@ from repro.models.config import ModelConfig
 from repro.models.lm import LM
 
 
+def _pool_copy_page(kv, src: int, dst: int):
+    """Copy one physical page across every layer buffer of a KV pool —
+    the single stacked ``{"k", "v"}`` dict, or the tuple of per-segment
+    dicts the width-segmented (per-layer ``kv_layer_bits``) layout
+    allocates. Page indices are width-agnostic: every segment's pool has
+    the same page axis, only the packed word count differs."""
+    if isinstance(kv, tuple):
+        return tuple(_pool_copy_page(seg, src, dst) for seg in kv)
+    return {
+        name: kv[name].at[:, dst].set(kv[name][:, src])
+        for name in ("k", "v")
+    }
+
+
 def sample_per_slot(key: jax.Array, logits: jnp.ndarray) -> jnp.ndarray:
     """One categorical draw per row of (slots, V) logits, each row under
     its own slot-folded key — the one place the per-slot key derivation
@@ -123,6 +137,24 @@ class ServeEngine:
     def __post_init__(self):
         if self.tracer is None:
             self.tracer = obs.default_tracer()
+        # a plan carrying per-layer KV widths (the static analysis pass's
+        # activation-width family) rewrites the config before the LM is
+        # built: uniform widths normalize to the scalar knob (the exact
+        # legacy decode program — what makes equal-width outputs bitwise
+        # identical), mixed widths install the segmented layout
+        if self.plan is not None and getattr(self.plan, "kv_bits", None):
+            n_kv = self.cfg.n_kv_layers
+            widths = self.plan.kv_layer_widths(
+                n_kv, default=self.cfg.resolved_kv_bits)
+            comp = self.cfg.compression
+            if len(set(widths)) <= 1:
+                comp = dataclasses.replace(
+                    comp, kv_bits=widths[0] if widths else comp.kv_bits,
+                    kv_layer_bits=None)
+            else:
+                comp = dataclasses.replace(
+                    comp, kv_bits=max(widths), kv_layer_bits=widths)
+            self.cfg = dataclasses.replace(self.cfg, compression=comp)
         self.lm = LM(self.cfg)
         self.params = self.lm.init(prng_key(0))
         self.weight_plan = None
@@ -132,19 +164,19 @@ class ServeEngine:
             self.params = repack(self.params, self.weight_plan)
         # per-pass byte figures, fixed at init: the live byte counters are
         # these constants times host-side pass counts (execution-accurate
-        # under jit, where kernel-level dispatch counters are trace-time)
+        # under jit, where kernel-level dispatch counters are trace-time).
+        # No explicit bits argument: with per-layer widths installed the
+        # accessor sums each layer at its own width (mixed accounting)
         self._pass_bytes = weight_pass_bytes(self.params)
-        self._kv_bytes_per_row = self.cfg.kv_bytes_per_token(
-            self.cfg.resolved_kv_bits)
+        self._kv_bytes_per_row = self.cfg.kv_bytes_per_token()
         # both the residency planner and kv_bytes_per_token read the same
-        # resolved width, so the bytes accounting cannot skew if the
+        # resolved widths, so the bytes accounting cannot skew if the
         # default ever moves
         weight_bytes = self.cfg.n_params() * (
             self.cfg.resolved_weight_bits // 8)
         plan = decode_residency(
             weight_bytes=weight_bytes,
-            kv_bytes_per_token=self.cfg.kv_bytes_per_token(
-                self.cfg.resolved_kv_bits),
+            kv_bytes_per_token=self.cfg.kv_bytes_per_token(),
             seq_len=self.max_seq_len,
             chip=self.chip,
         )
@@ -454,9 +486,7 @@ class ServeEngine:
         """Device-side copy of one physical page (all layers, K and V).
         Overridable — the speculative engine mirrors into its draft
         pool."""
-        for name in ("k", "v"):
-            buf = self.state["kv"][name]
-            self.state["kv"][name] = buf.at[:, dst].set(buf[:, src])
+        self.state["kv"] = _pool_copy_page(self.state["kv"], src, dst)
 
     def _trim_pages(self, req: Request) -> None:
         """Free pages past the committed length (speculation rolled the

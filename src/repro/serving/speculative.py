@@ -44,6 +44,7 @@ from repro.core.tensor_store import tree_bytes
 from repro.models.lm import LM
 from repro.serving.engine import (
     ServeEngine,
+    _pool_copy_page,
     sample_per_slot,
     weight_pass_bytes,
 )
@@ -193,6 +194,8 @@ class SpeculativeEngine(ServeEngine):
         # kv_bits), through a draft LM whose config pins that width. The
         # two caches still append/roll back in lockstep — only the bytes
         # per appended row differ.
+        explicit_draft_kv = (self.draft_kv_bits is not None
+                             or bool(self.cfg.compression.draft_kv_bits))
         if self.draft_kv_bits is None:
             self.draft_kv_bits = resolve_draft_kv_bits(self.cfg)
         elif self.draft_kv_bits:
@@ -206,9 +209,23 @@ class SpeculativeEngine(ServeEngine):
                 f"draft KV width {self.draft_kv_bits} (ladder-snapped) "
                 f"must not be wider than the target's {tgt_kv}"
             )
+        draft_klb = None
+        if (self.cfg.compression.kv_layer_bits is not None
+                and self.draft_kv_bits and not explicit_draft_kv):
+            # mixed-width target: each draft layer steps one rung below
+            # its *own* planned width (ladder_snap floors at AF8), so the
+            # draft KV stream narrows layer-for-layer; the scalar
+            # draft_kv_bits stays the max (the kv_layer_bits contract)
+            draft_klb = tuple(
+                ladder_snap(b, below=True)
+                for b in self.cfg.compression.kv_layer_bits)
+            self.draft_kv_bits = max(draft_klb)
+            if len(set(draft_klb)) <= 1:
+                draft_klb = None          # collapsed uniform: scalar knob
         self.draft_cfg = dataclasses.replace(
             self.cfg, compression=dataclasses.replace(
-                self.cfg.compression, kv_bits=self.draft_kv_bits))
+                self.cfg.compression, kv_bits=self.draft_kv_bits,
+                kv_layer_bits=draft_klb))
         self.draft_lm = LM(self.draft_cfg)
         if self.paged:
             # the draft's paged pool mirrors the target's: same page ids,
@@ -530,9 +547,8 @@ class SpeculativeEngine(ServeEngine):
 
     def _copy_page(self, src: int, dst: int) -> None:
         super()._copy_page(src, dst)      # COW mirrors into the draft pool
-        for name in ("k", "v"):
-            buf = self.draft_state["kv"][name]
-            self.draft_state["kv"][name] = buf.at[:, dst].set(buf[:, src])
+        self.draft_state["kv"] = _pool_copy_page(
+            self.draft_state["kv"], src, dst)
 
     def _push_tables(self) -> None:
         super()._push_tables()            # one table drives both pools
@@ -562,9 +578,9 @@ class SpeculativeEngine(ServeEngine):
     @property
     def draft_kv_bytes_per_token(self) -> int:
         """Bytes one appended draft-KV row costs per token, at the
-        draft's (narrower) packed width."""
-        return self.draft_cfg.kv_bytes_per_token(
-            self.draft_cfg.resolved_kv_bits)
+        draft's (narrower) packed width — summed per layer when the
+        draft carries a mixed per-layer plan."""
+        return self.draft_cfg.kv_bytes_per_token()
 
     def metrics_snapshot(self) -> Dict[str, Any]:
         """The base snapshot plus the draft stream. Note

@@ -156,6 +156,45 @@ def test_derive_plan_mixed_widths_step_per_leaf(wa, wb, wc, delta):
     assert d.int_bits is not plan.int_bits
 
 
+@settings(max_examples=25)
+@given(st.sampled_from((8, 12, 16, 20, 24, 28, 32)),
+       st.sampled_from((8, 12, 16, 20, 24, 28, 32)),
+       st.sampled_from((0, 4, 8)))
+def test_derive_plan_kv_family_roundtrip(kv0, kv1, delta):
+    """The three plan families derive independently: ``kv_bits`` entries
+    always step exactly one Table 3 rung down regardless of the weight
+    delta, never below AF8, ints are untouched — and the derived plan
+    survives the JSON codec round-trip with all three families intact."""
+    import json as _json
+    from repro.core.formats import ladder_snap
+    plan = CompressionPlan(
+        float_bits={"w": 16},
+        int_bits={"inputs/tokens": (9, False)},
+        kv_bits={"kv/layer_0": kv0, "kv/layer_1": kv1},
+    )
+    d = derive_plan(plan, delta)
+    for key, src in plan.kv_bits.items():
+        # one rung down irrespective of delta (the draft-KV ladder
+        # contract), floored at AF8
+        assert d.kv_bits[key] == ladder_snap(src, below=True)
+        assert d.kv_bits[key] >= FLOAT_LADDER[0]
+        assert d.kv_bits[key] < src or src == FLOAT_LADDER[0]
+        assert d.kv_bits[key] in FLOAT_LADDER
+    assert d.float_bits["w"] == ladder_snap(16 - delta)    # own delta
+    assert d.int_bits == plan.int_bits                     # never narrow
+    assert d.kv_bits is not plan.kv_bits                   # fresh dict
+    # JSON round-trip: codec carries the kv family losslessly
+    back = CompressionPlan.from_jsonable(
+        _json.loads(_json.dumps(d.to_jsonable())))
+    assert back.kv_bits == d.kv_bits
+    assert back.float_bits == d.float_bits
+    assert back.int_bits == d.int_bits
+    # deriving the round-tripped plan again equals deriving the original
+    # twice: the codec is transparent to the ladder walk
+    assert derive_plan(back, delta).kv_bits == \
+        derive_plan(d, delta).kv_bits
+
+
 @settings(max_examples=15)
 @given(st.sampled_from((8, 12, 16, 20)), st.sampled_from((8, 12, 16, 20)))
 def test_repack_mixed_plan_idempotent_at_width(wa, wb):
