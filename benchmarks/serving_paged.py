@@ -15,10 +15,26 @@ dense ``max_seq_len`` region per slot. Three measurements per config:
   * **prefix-hit rate on a shared system prompt** — identical prompt
     prefixes dedup page-for-page through the chain-key registry.
 
+Since the fused paged-attention path landed, the paged leg attends
+straight through the device-resident page table; a fourth measurement
+pair covers it:
+
+  * **fused vs gather vs dense, token-exact three ways** — the same
+    traffic through ``paged_attn=True`` (fused), ``paged_attn=False``
+    (gather-materialize oracle) and the dense engine must emit
+    identical greedy tokens;
+  * **H2D table traffic and pages read** — the device-resident table
+    means clean ticks skip the upload entirely and dirty ticks ship
+    only dirty rows (``table_upload_bytes`` well under calls x full
+    table), while ``kv_pages_read`` scales with pages actually live,
+    not slots x max_pages (the dense-equivalent figure).
+
 Greedy outputs are asserted identical to the dense engine in-bench for
-both traffics — an ERROR row (and CI failure) on any divergence. Writes
-``BENCH_serving_paged.json`` for CI to archive and returns the usual
-``(name, us, derived)`` CSV rows.
+both traffics — an ERROR row (and CI failure) on any divergence. An
+interpret-mode Pallas-kernel parity probe rides along so the real
+kernel lowering (not just the jnp oracle) is exercised on CPU CI.
+Writes ``BENCH_serving_paged.json`` for CI to archive and returns the
+usual ``(name, us, derived)`` CSV rows.
 """
 from __future__ import annotations
 
@@ -101,6 +117,44 @@ def _mixed_kv_leg(cfg, name: str, prompts) -> dict:
     }
 
 
+def _kernel_parity_probe() -> dict:
+    """Run the actual Pallas paged-attention kernel in interpret mode
+    against the jnp oracle on one packed case — proof the kernel
+    lowering itself (not just the dispatch-layer oracle CPU CI
+    otherwise runs) computes the fused program."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ref as kref
+    from repro.kernels.paged_attention import paged_attention
+
+    bits, d, page, hkv, h, b, mp = 8, 32, 4, 2, 4, 3, 3
+    n_pages = 1 + b * mp
+    rng = np.random.default_rng(5)
+    w = d * bits // 32
+    k_pool = kref.pack_ref(jnp.asarray(
+        rng.standard_normal((n_pages, page, hkv, d)), jnp.float32), bits
+    ).reshape(n_pages, page, hkv, w)
+    v_pool = kref.pack_ref(jnp.asarray(
+        rng.standard_normal((n_pages, page, hkv, d)), jnp.float32), bits
+    ).reshape(n_pages, page, hkv, w)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    table = jnp.asarray(
+        rng.permutation(np.arange(1, n_pages))[: b * mp].reshape(b, mp),
+        jnp.int32)
+    kv_len = jnp.asarray([1, page, b * page - 1], jnp.int32)
+    got = paged_attention(q, k_pool, v_pool, table, kv_len, bits, d,
+                          interpret=True)
+    want = kref.paged_attention_ref(q, k_pool, v_pool, table, kv_len,
+                                    bits, d)
+    err = float(jnp.max(jnp.abs(got - want)))
+    if err > 2e-5:
+        raise AssertionError(
+            f"interpret-mode paged-attention kernel diverged from the "
+            f"oracle (max abs err {err:.2e})")
+    return {"kernel_interpret_parity": True,
+            "kernel_interpret_max_abs_err": err}
+
+
 def bench_serving_paged() -> List[Tuple[str, float, str]]:
     from repro.configs import get_config
     from repro.serving import ServeEngine
@@ -125,10 +179,44 @@ def bench_serving_paged() -> List[Tuple[str, float, str]]:
                             paged=True, kv_page_size=PAGE,
                             kv_pool_pages=pool_pages)
         pres, pstats, reqs, peak_live = _drain_tracked(paged, mixed)
-        if dres != pres:
+        gather = ServeEngine(cfg, max_seq_len=SEQ, max_slots=SLOTS,
+                             paged=True, kv_page_size=PAGE,
+                             kv_pool_pages=pool_pages, paged_attn=False)
+        gres, gstats, _, _ = _drain_tracked(gather, mixed)
+        if not (dres == pres == gres):
             raise AssertionError(
-                f"{name}: paged output diverged from the dense engine "
-                "under greedy decoding (mixed-length workload)")
+                f"{name}: greedy outputs diverged across "
+                "{dense, paged+fused, paged+gather} "
+                "(mixed-length workload)")
+
+        # device-resident table: uploads fire only on dirty ticks and
+        # ship dirty rows, never one full table per jitted call
+        calls = pstats["decode_calls"] + pstats["prefill_calls"]
+        full_table_bytes = SLOTS * pages_per_seq * 4
+        if not pstats["table_uploads"] < calls:
+            raise AssertionError(
+                f"{name}: {pstats['table_uploads']} table uploads over "
+                f"{calls} jitted calls — clean ticks are not skipping "
+                "the H2D transfer")
+        if not pstats["table_upload_bytes"] < calls * full_table_bytes:
+            raise AssertionError(
+                f"{name}: H2D table traffic "
+                f"{pstats['table_upload_bytes']} B is no better than "
+                f"re-uploading the full table every call "
+                f"({calls} x {full_table_bytes} B)")
+        # fused KV reads scale with pages actually live, not the
+        # slots x max_pages dense-equivalent walk
+        if not 0 < pstats["kv_pages_read"] \
+                < pstats["kv_pages_read_dense_equiv"]:
+            raise AssertionError(
+                f"{name}: fused path read {pstats['kv_pages_read']} "
+                f"pages vs dense-equivalent "
+                f"{pstats['kv_pages_read_dense_equiv']}")
+        if gstats["kv_pages_read"] != 0:
+            raise AssertionError(
+                f"{name}: gather oracle accrued kv_pages_read "
+                f"({gstats['kv_pages_read']}) — the counter must track "
+                "only the fused path")
 
         dense_capacity = pool_pages // pages_per_seq
         if peak_live <= dense_capacity:
@@ -170,7 +258,10 @@ def bench_serving_paged() -> List[Tuple[str, float, str]]:
             f"{dense_capacity};mean_kv_bytes_per_request={mean_paged:.0f};"
             f"dense_kv_bytes_per_request={dense_bytes};"
             f"pool_peak_utilization={pstats['pool_peak_utilization']:.2f};"
-            f"prefix_hit_rate={hit_rate:.2f}",
+            f"prefix_hit_rate={hit_rate:.2f};"
+            f"pages_read={pstats['kv_pages_read']};"
+            f"dense_equiv_pages={pstats['kv_pages_read_dense_equiv']};"
+            f"table_upload_bytes={pstats['table_upload_bytes']}",
         ))
         # mixed per-layer KV widths (the static-analysis plan family):
         # install a two-width plan through ServeEngine(plan=) and assert
@@ -187,7 +278,18 @@ def bench_serving_paged() -> List[Tuple[str, float, str]]:
             "pool_pages": pool_pages,
             "pages_per_seq": pages_per_seq,
             "greedy_exact_mixed": dres == pres,
+            "greedy_exact_gather": dres == gres,
             "greedy_exact_shared": dres2 == pres2,
+            "paged_attn_fused": pstats["paged_attn"],
+            "kv_pages_read": pstats["kv_pages_read"],
+            "kv_pages_read_dense_equiv":
+                pstats["kv_pages_read_dense_equiv"],
+            "kv_pages_read_bytes": pstats["kv_pages_read_bytes"],
+            "table_uploads": pstats["table_uploads"],
+            "table_upload_bytes": pstats["table_upload_bytes"],
+            "table_rows_uploaded": pstats["table_rows_uploaded"],
+            "jitted_calls": calls,
+            "full_table_bytes": full_table_bytes,
             "peak_concurrent_residents": peak_live,
             "dense_equivalent_capacity": dense_capacity,
             "overcommit": peak_live > dense_capacity,
@@ -203,6 +305,7 @@ def bench_serving_paged() -> List[Tuple[str, float, str]]:
             "ticks_paged": pstats["ticks"],
         })
 
+    artifact.update(_kernel_parity_probe())
     with open(ARTIFACT, "w") as f:
         json.dump(artifact, f, indent=2)
     rows.append(("serving_paged.artifact", 0.0, ARTIFACT))

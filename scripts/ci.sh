@@ -42,10 +42,17 @@ if ! $smoke_only; then
     # the 2 x bits/32 train-step weight stream and the repack_every
     # staleness contract, and writes BENCH_train_packed.json;
     # serving_paged drains mixed-length and shared-prefix traffic through
-    # the dense and paged engines, asserts greedy outputs identical, that
-    # an undersized pool still over-commits (peak residents beat the
-    # pool's dense-region capacity) with per-request KV bytes scaling
-    # with actual length, and writes BENCH_serving_paged.json;
+    # the dense engine and BOTH paged attention paths (fused
+    # through-the-table + gather-materialize oracle), asserts greedy
+    # outputs identical three ways, that an undersized pool still
+    # over-commits (peak residents beat the pool's dense-region
+    # capacity) with per-request KV bytes scaling with actual length,
+    # that the device-resident table ships only dirty rows (uploads <
+    # jitted calls, bytes << calls x full table) while fused KV reads
+    # scale with live pages (< the slots x max_pages dense-equivalent),
+    # runs the paged-attention Pallas kernel in interpret mode against
+    # its oracle (the fused parity smoke), and writes
+    # BENCH_serving_paged.json;
     # calibration runs the static-analysis calibration pass on two zoo
     # configs (asserting the tuned mixed-width plan beats uniform at the
     # same quality gate) plus the adaptive draft controller (asserting
@@ -82,9 +89,12 @@ if ! $smoke_only; then
 
     echo "== static-analysis lint gate (packed-path auditor) =="
     # The four-pass auditor (repro.analysis) over two zoo configs: the
-    # traced entry points must prove every planned leaf fused, the
-    # default plan must be sound against the derived range proofs, and
-    # the sharding/donation invariants must hold. Reports are archived
+    # traced entry points (now including a paged decode state, which
+    # must dispatch onto the fused paged-attention kernel — any
+    # gather_kv_pages record in that trace is an error) must prove every
+    # planned leaf fused, the default plan must be sound against the
+    # derived range proofs, and the sharding/donation invariants must
+    # hold. Reports are archived
     # (BENCH_lint_<arch>.json) and schema-validated. Then the two
     # negative legs: a seeded-broken plan fixture and a seeded unfused
     # dispatch must BOTH fail with a nonzero exit — a gate that cannot
@@ -117,7 +127,7 @@ if ! $smoke_only; then
     rm -f BENCH_serve_metrics.jsonl
     python -m repro.launch.serve --arch qwen3_8b --reduced \
         --requests 8 --max-new-tokens 4 --max-seq-len 64 \
-        --speculative 2 --paged --pack-weights \
+        --speculative 2 --paged --paged-attn --pack-weights \
         --metrics-out BENCH_serve_metrics.jsonl --metrics-interval 4
     python -m repro.obs.validate BENCH_serve_metrics.jsonl
 fi

@@ -6,11 +6,11 @@ the materialized (unpack-then-XLA) path or a bare-decode fallback, and
 nothing fails — the numbers are identical, only the weight-read bytes
 triple. The kernels already record every trace-time dispatch decision
 (``kernels.ops.DISPATCH_RECORDS`` / ``FALLBACK_RECORDS``); this pass
-traces the *real* entry points — ``decode_step``, ``prefill_step``,
-``verify_step``, and the packed-master train body
-(``lm.loss(st_tree(packed, masters), batch)``) — with the plan's packed
-params, diffs the record streams around the trace, and turns the diff
-into findings:
+traces the *real* entry points — ``decode_step`` (dense and paged
+states), ``prefill_step``, ``verify_step``, and the packed-master train
+body (``lm.loss(st_tree(packed, masters), batch)``) — with the plan's
+packed params, diffs the record streams around the trace, and turns the
+diff into findings:
 
 * any new **fallback** record is an error (with the recorded spec,
   shape, and reason, plus the candidate plan leaves whose shape/width
@@ -26,7 +26,11 @@ into findings:
   leading layer axis stripped, since the scan slices them). Matching is
   at shape-class granularity — the call site does not know leaf paths,
   so two same-shape same-width leaves are proven by either's record;
-  the finding lists every unproven leaf explicitly.
+  the finding lists every unproven leaf explicitly;
+* the paged decode trace must land on the **fused paged-attention**
+  kernel: any ``gather_kv_pages`` record inside the window — or a
+  missing ``fused_paged`` dispatch — is an error (the serving hot path
+  silently de-fused back to the gather-materialize oracle).
 """
 from __future__ import annotations
 
@@ -95,7 +99,7 @@ def trace_entry_points(cfg, packed, masters, batch_size: int = 1,
     n_valid = jnp.full((batch_size,), 4, jnp.int32)
     state = lm.init_decode_state(batch_size, seq_len, abstract=True)
 
-    entry_points = (
+    entry_points = [
         ("decode_step",
          lambda: jax.make_jaxpr(lm.decode_step)(packed, state, tokens1)),
         ("prefill_step",
@@ -107,7 +111,18 @@ def trace_entry_points(cfg, packed, masters, batch_size: int = 1,
          lambda: jax.make_jaxpr(
              lambda pk, ms, b: lm.loss(st_tree(pk, ms), b))(
                  packed, masters, _train_batch(cfg, batch_size, seq_len))),
-    )
+    ]
+    if lm.supports_rollback:
+        # the paged serving hot path: decode_step over a page-pool state
+        # must dispatch onto the fused paged-attention kernel, never the
+        # gather-materialize oracle — lint_dispatch checks the records
+        # this trace fires
+        def _paged_trace():
+            pstate = lm.init_paged_decode_state(
+                batch_size, seq_len, page_size=8,
+                n_pages=max(batch_size * 4, 2), abstract=True)
+            return jax.make_jaxpr(lm.decode_step)(packed, pstate, tokens1)
+        entry_points.insert(1, ("paged_decode_step", _paged_trace))
     for name, thunk in entry_points:
         try:
             thunk()
@@ -169,6 +184,36 @@ def lint_dispatch(cfg, plan=None, params: Optional[Dict] = None,
                     "shape": list(rec.shape), "bits": rec.bits,
                     "reason": rec.reason, "candidates": cands},
         ))
+
+    # -- the paged decode hot path must stay fused --------------------------
+    # gather_kv_pages is the demoted oracle: any record of it inside the
+    # paged trace means decode_step materialized the dense per-sequence
+    # view instead of attending through the table; and the trace must
+    # positively prove the fused paged-attention dispatch fired.
+    if "paged_decode_step" in traced:
+        for rec in new_dispatch:
+            if rec.op != "gather_kv_pages":
+                continue
+            findings.append(Finding(
+                check="dispatch", severity="error", path="paged_decode_step",
+                message=(
+                    f"paged decode dispatched onto gather_kv_pages "
+                    f"(materialized page view, pool shape "
+                    f"{tuple(rec.shape)}) instead of the fused "
+                    f"paged-attention kernel"),
+                detail={"op": rec.op, "shape": list(rec.shape)},
+            ))
+        if not any(r.op == "paged_attention" and r.path == "fused_paged"
+                   for r in new_dispatch):
+            findings.append(Finding(
+                check="dispatch", severity="error",
+                path="paged_decode_step",
+                message=(
+                    "paged decode traced without a fused_paged "
+                    "paged_attention dispatch — the paged hot path "
+                    "silently de-fused"),
+                detail={"traced": traced},
+            ))
 
     # -- wholesale materialization of a planned leaf ------------------------
     for rec in new_dispatch:

@@ -203,3 +203,30 @@ def kv_decode(q, k_packed, v_packed, kv_len, bits: int, d: int):
         return _k(q, k_packed, v_packed, kv_len, bits, d,
                   interpret=BACKEND.interpret)
     return _ref.kv_decode_ref(q, k_packed, v_packed, bits, d, kv_len)
+
+
+def paged_attention(q, k_pool, v_pool, table, kv_len, bits: int, d: int,
+                    fallback: bool = False):
+    """Attend one token straight through the page table (the fused paged
+    serving hot path): pools (P+1, page, Hkv, W) packed words (or dense
+    rows when ``bits`` is 0), table (B, max_pages) int32 page ids. Only
+    the pages the table names leave HBM — the dense gathered view never
+    materializes. ``fallback=True`` is the parity escape hatch: it runs
+    the gather-materialize oracle instead and records itself as such, so
+    the dispatch linter can tell a deliberate oracle run from a fused
+    path that silently de-fused. ``packed_bytes`` stays 0 on the fused
+    record: bytes-read scale with pages actually live, which only the
+    serving layer knows (``kv_pages_read`` counters), not the pool size."""
+    if fallback:
+        record_dispatch("paged_attention", "materialized",
+                        shape=k_pool.shape, bits=bits)
+        return _ref.paged_attention_ref(q, k_pool, v_pool, table, kv_len,
+                                        bits, d)
+    record_dispatch("paged_attention", "fused_paged",
+                    shape=k_pool.shape, bits=bits)
+    if BACKEND.use_pallas:
+        from repro.kernels.paged_attention import paged_attention as _k
+        return _k(q, k_pool, v_pool, table, kv_len, bits, d,
+                  interpret=BACKEND.interpret)
+    return _ref.paged_attention_ref(q, k_pool, v_pool, table, kv_len,
+                                    bits, d)

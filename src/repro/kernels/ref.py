@@ -6,7 +6,9 @@ bit-manipulation paths) against these functions.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bitpack
 from repro.core.formats import (
@@ -141,3 +143,50 @@ def kv_decode_ref(
     p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v)
     return out.reshape(b, h, dim).astype(q.dtype)
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,          # (B, H, D) one new token
+    k_pool: jnp.ndarray,     # (P+1, page, Hkv, W) uint32 packed words,
+    v_pool: jnp.ndarray,     #   or (P+1, page, Hkv, D) dense when bits=0
+    table: jnp.ndarray,      # (B, max_pages) int32 physical page ids
+    kv_len: jnp.ndarray,     # (B,) valid lengths
+    bits: int,
+    d: int,
+) -> jnp.ndarray:
+    """Fused paged-attention oracle: gather the pages the table names
+    into the dense per-sequence view, then run the dense kernels' exact
+    math on it. This IS the pre-fused gather-materialize program
+    (``models.lm.gather_kv_pages`` + ``kv_decode_ref`` / the dense
+    softmax), which is what makes fused-vs-gather parity checkable down
+    to the bit on the jnp backend. Rows gathered through scrap entries
+    sit at positions >= ``kv_len`` where the mask zeroes their softmax
+    weight exactly, so scrap garbage never leaks into the output."""
+
+    def gather(pool):
+        g = jnp.take(pool, table, axis=0)     # (B, mp, page, Hkv, wd)
+        b_, mp, pg = g.shape[0], g.shape[1], g.shape[2]
+        return g.reshape((b_, mp * pg) + g.shape[3:])
+
+    kc, vc = gather(k_pool), gather(v_pool)
+    if bits:
+        return kv_decode_ref(q, kc, vc, bits, d, kv_len)
+    # dense width: the exact models.attention.decode_attention program
+    b, h, dim = q.shape
+    s, hkv = kc.shape[1], kc.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, dim).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, kc.astype(jnp.float32)
+    ) / np.sqrt(dim)
+    mask = jnp.arange(s)[None, None, None, :] < kv_len[:, None, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vc.astype(jnp.float32))
+    # kv_len == 0 rows (dead slots; live slots always append before they
+    # attend) emit zeros like the kernel's flush guard, instead of the
+    # garbage-mean a fully NEG_INF-masked softmax produces. For live rows
+    # the select passes the identical value through bit-for-bit.
+    out = jnp.where((kv_len == 0)[:, None, None], 0.0,
+                    out.reshape(b, h, dim))
+    return out.astype(q.dtype)

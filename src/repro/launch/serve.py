@@ -4,6 +4,7 @@
         [--kv-bits 8] [--max-seq-len 2048] [--reduced] \
         [--speculative 4] [--draft-bits 12] [--adaptive] \
         [--paged] [--kv-page-size 16] [--kv-pool-pages N] \
+        [--paged-attn | --gather-attn] \
         [--pack-weights] [--plan plan.json | --calibrate] \
         [--save-plan plan.json]
 
@@ -58,6 +59,15 @@ def main() -> None:
                     help="physical pool pages (default: slots x "
                          "pages/sequence; smaller over-commits slots "
                          "against the pool)")
+    ap.add_argument("--paged-attn", dest="paged_attn",
+                    action="store_true", default=True,
+                    help="paged only: attend straight through the "
+                         "device-resident page table (fused paged "
+                         "attention, the default)")
+    ap.add_argument("--gather-attn", dest="paged_attn",
+                    action="store_false",
+                    help="paged only: demote to the gather-materialize "
+                         "oracle (dense per-sequence view each step)")
     ap.add_argument("--pack-weights", action="store_true",
                     help="pack target weights at the planned width")
     ap.add_argument("--adaptive", action="store_true",
@@ -129,7 +139,8 @@ def main() -> None:
         tracer = obs.Tracer()
         tracer.set_sink(args.metrics_out)
     paged_kw = dict(paged=args.paged, kv_page_size=args.kv_page_size,
-                    kv_pool_pages=args.kv_pool_pages, tracer=tracer,
+                    kv_pool_pages=args.kv_pool_pages,
+                    paged_attn=args.paged_attn, tracer=tracer,
                     metrics_interval=args.metrics_interval)
     if args.speculative:
         eng = SpeculativeEngine(
@@ -161,6 +172,11 @@ def main() -> None:
               f"pool_peak_utilization="
               f"{stats['pool_peak_utilization']:.2f} "
               f"prefix_hit_rate={stats['prefix_hit_rate']:.2f}")
+        print(f"paged-attn: fused={stats['paged_attn']} "
+              f"pages_read={stats['kv_pages_read']} "
+              f"(dense-equiv {stats['kv_pages_read_dense_equiv']}) "
+              f"table_rows_uploaded={stats['table_rows_uploaded']} "
+              f"table_upload_bytes={stats['table_upload_bytes']}")
     if args.speculative:
         print(f"speculative: k={stats['k']} draft_bits={stats['draft_bits']} "
               f"acceptance={stats['acceptance_rate']:.3f} "

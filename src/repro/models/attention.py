@@ -155,6 +155,61 @@ def decode_attention(
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def paged_decode_attention(
+    q: jnp.ndarray,                        # (B, H, D) one new token
+    k_pool, v_pool,                        # (P+1, page, Hkv, W|D) pools
+    table: jnp.ndarray,                    # (B, max_pages) int32 page ids
+    kv_len: jnp.ndarray,                   # (B,) valid lengths
+    kv_bits: Optional[int] = None,
+    fallback: bool = False,
+) -> jnp.ndarray:
+    """Score one token straight through the page table — the fused paged
+    serving path. Only the pages the table names are read; the dense
+    gathered view of ``gather_kv_pages`` never materializes.
+    ``fallback=True`` demotes to the gather-materialize oracle (recorded
+    as such for the dispatch linter)."""
+    return kops.paged_attention(q, k_pool, v_pool, table, kv_len,
+                                kv_bits or 0, q.shape[-1],
+                                fallback=fallback)
+
+
+def append_kv_pool_row(k_pool, v_pool, k_new, v_new, table, kv_len,
+                       kv_bits: Optional[int] = None):
+    """Persist one token's (Hkv, D) K/V row straight to its physical
+    page — the fused paged path's append. The row packs exactly as
+    ``update_kv_cache`` packs it (same ``kops.pack`` call on the same
+    reshaped operand), so the pool holds bit-identical words whether the
+    row arrived here or through the gather-view + ``scatter_kv_row``
+    round-trip. Out-of-range lengths (dead slots) clamp onto the scrap
+    page, mirroring ``scatter_kv_row``."""
+    if kv_bits:
+        b = k_new.shape[0]
+        k_row = kops.pack(
+            k_new.reshape(b, -1).astype(jnp.float32), kv_bits
+        ).reshape(b, k_new.shape[1], -1)
+        v_row = kops.pack(
+            v_new.reshape(b, -1).astype(jnp.float32), kv_bits
+        ).reshape(b, v_new.shape[1], -1)
+    else:
+        k_row, v_row = k_new, v_new
+    return (_scatter_pool_row(k_pool, k_row, table, kv_len),
+            _scatter_pool_row(v_pool, v_row, table, kv_len))
+
+
+def _scatter_pool_row(pool, row, table, kv_len):
+    """Write each sequence's (Hkv, W) row at pool position
+    (table[b, len // page], len % page)."""
+    page = pool.shape[1]
+    mp = table.shape[1]
+    pos = jnp.minimum(kv_len, mp * page - 1)
+    pidx = jnp.minimum(pos // page, mp - 1)
+    ids = jnp.take_along_axis(table, pidx[:, None], axis=1)[:, 0]
+    phys = ids * page + pos % page
+    flat = pool.reshape((-1,) + pool.shape[2:])
+    flat = flat.at[phys].set(row.astype(flat.dtype))
+    return flat.reshape(pool.shape)
+
+
 def update_kv_cache(k_cache, v_cache, k_new, v_new, kv_len,
                     kv_bits: Optional[int] = None):
     """Insert one token's K/V at position kv_len per sequence.

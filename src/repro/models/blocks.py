@@ -19,8 +19,10 @@ import numpy as np
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
 from repro.models.attention import (
+    append_kv_pool_row,
     decode_attention,
     flash_attention,
+    paged_decode_attention,
     update_kv_cache,
 )
 from repro.models.config import ModelConfig
@@ -132,6 +134,43 @@ def attention_decode(
     state = dict(state, k=kc, v=vc)
     return x + L.linear(o.reshape(b, 1, h * hd), p["wo"],
                         "...f,fd->...d"), state
+
+
+def attention_decode_paged(
+    p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+    kv: Dict, table: jnp.ndarray, kv_len: jnp.ndarray,
+    positions: jnp.ndarray,
+    kv_bits_override: Optional[int] = None,
+    oracle: bool = False,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Fused-paged twin of :func:`attention_decode` (self-attention
+    only): the same q/k/v/rope program, but the new row persists straight
+    to its physical page (``append_kv_pool_row``) and attention walks the
+    pool through the table (``kernels.paged_attention``) — the dense
+    gathered view never materializes. ``kv`` is one layer's pool slice
+    ``{"k", "v"}`` of shape (P+1, page, Hkv, W). ``oracle=True`` routes
+    the attention through the gather-materialize reference instead (the
+    linter-visible parity escape hatch)."""
+    b, _, d = x.shape
+    hd, h, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    xn = L.rms_norm(x, p["ln"])
+    q = L.linear(xn, p["wq"]).reshape(b, 1, h, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"])
+    kv_bits = (kv_bits_override if kv_bits_override is not None
+               else cfg.compression.kv_bits)
+    k = L.linear(xn, p["wk"]).reshape(b, 1, hkv, hd)
+    v = L.linear(xn, p["wv"]).reshape(b, 1, hkv, hd)
+    if cfg.qk_norm:
+        k = L.rms_norm(k, p["k_norm"])
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    kc, vc = append_kv_pool_row(kv["k"], kv["v"], k[:, 0], v[:, 0],
+                                table, kv_len, kv_bits)
+    o = paged_decode_attention(q[:, 0], kc, vc, table, kv_len + 1,
+                               kv_bits, fallback=oracle)
+    return x + L.linear(o.reshape(b, 1, h * hd), p["wo"],
+                        "...f,fd->...d"), {"k": kc, "v": vc}
 
 
 # ---------------------------------------------------------------------------

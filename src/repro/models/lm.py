@@ -39,6 +39,7 @@ from repro import compat
 
 from repro.core import bitpack
 from repro.distributed.sharding import constrain
+from repro.kernels import ops as kops
 from repro.models import blocks as B
 from repro.models import layers as L
 from repro.models.config import ModelConfig, ShapeConfig
@@ -66,7 +67,15 @@ def gather_kv_pages(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     through unallocated (scrap) entries are garbage, but they only ever
     sit at positions >= the sequence's valid length, where attention
     masks them — the same dead-row contract the dense cache relies on.
+
+    This is the *demoted* paged path: the fused kernel
+    (``kernels.paged_attention``) attends through the table without ever
+    building this view, so the dispatch record here lets the static
+    linter prove a fused-configured trace never materialized the gather.
     """
+    kops.record_dispatch("gather_kv_pages", "materialized",
+                         pool.size * pool.dtype.itemsize,
+                         shape=pool.shape)
     g = jnp.take(pool, table, axis=0)          # (B, mp, page, Hkv, W)
     b, mp, pg = g.shape[0], g.shape[1], g.shape[2]
     return g.reshape((b, mp * pg) + g.shape[3:])
@@ -100,6 +109,12 @@ def scatter_kv_row(pool: jnp.ndarray, view: jnp.ndarray,
 @dataclasses.dataclass
 class LM:
     cfg: ModelConfig
+    # Paged decode routing: True (default) attends straight through the
+    # page table with the fused kernel (kernels.paged_attention); False
+    # demotes to the gather-materialize program (gather_kv_pages +
+    # attention_decode + scatter_kv_row) — kept as the parity oracle.
+    # Irrelevant to dense decode states.
+    paged_attn: bool = True
 
     # ------------------------------------------------------------------ init
     def init(self, rng) -> Dict:
@@ -535,13 +550,19 @@ class LM:
         Accepts both decode-state layouts: the dense per-slot cache of
         :meth:`init_decode_state` and the paged pool + page table of
         :meth:`init_paged_decode_state` (detected by the ``table`` key).
-        The paged path gathers each layer's pages into the dense view,
-        runs the identical attention/append program on it, then persists
-        only the appended row back to its physical page — so the two
-        layouts are bitwise-identical in outputs."""
+        Paged states dispatch straight into the fused paged-attention
+        kernel by default (``paged_attn``): the new row persists directly
+        to its physical page and attention walks the pool through the
+        table, so only live pages are read. With ``paged_attn=False``
+        the demoted gather path runs instead — gather each layer's pages
+        into the dense view, run the dense attention/append program,
+        scatter the appended row back. Both produce bitwise-identical
+        outputs (same packed words in, same masked softmax), which is
+        exactly what the parity tests pin."""
         cfg = self.cfg
         fam = cfg.family
         table = state.get("table")
+        fused_paged = table is not None and self.paged_attn
         x = L.embed(tokens, params["embed"]).astype(cfg.dtype)
         x = constrain(x, ("data", None, None))
         positions = state["len"][:, None]
@@ -564,16 +585,22 @@ class LM:
             def body_at(bits):
                 def body(h, xs):
                     lp, kv = xs
-                    kc, vc = kv_view(kv)
-                    st = {"k": kc, "v": vc, "len": state["len"]}
-                    h, st = B.attention_decode(lp["attn"], h, cfg, st,
-                                               positions,
-                                               kv_bits_override=bits)
+                    if fused_paged:
+                        h, new_kv = B.attention_decode_paged(
+                            lp["attn"], h, cfg, kv, table, state["len"],
+                            positions, kv_bits_override=bits)
+                    else:
+                        kc, vc = kv_view(kv)
+                        st = {"k": kc, "v": vc, "len": state["len"]}
+                        h, st = B.attention_decode(lp["attn"], h, cfg, st,
+                                                   positions,
+                                                   kv_bits_override=bits)
+                        new_kv = kv_persist(kv, st)
                     if fam == "moe":
                         h = B.moe_apply(lp["moe"], h, cfg)
                     else:
                         h = B.mlp_apply(lp["mlp"], h, cfg)
-                    return h, kv_persist(kv, st)
+                    return h, new_kv
                 return body
             if isinstance(state["kv"], tuple):
                 # width-segmented cache: one scan per contiguous
@@ -644,15 +671,24 @@ class LM:
         elif fam == "encdec":
             def body(h, xs):
                 lp, kv, cross = xs
-                kc, vc = kv_view(kv)
-                st = {"k": kc, "v": vc, "len": state["len"]}
-                h, st = B.attention_decode(lp["self"], h, cfg, st, positions)
+                if fused_paged:
+                    h, new_kv = B.attention_decode_paged(
+                        lp["self"], h, cfg, kv, table, state["len"],
+                        positions)
+                else:
+                    kc, vc = kv_view(kv)
+                    st = {"k": kc, "v": vc, "len": state["len"]}
+                    h, st = B.attention_decode(lp["self"], h, cfg, st,
+                                               positions)
+                    new_kv = kv_persist(kv, st)
+                # the cross cache is prompt-scoped, dense and fixed-size
+                # per slot — nothing to page through
                 cst = {"ck": cross["ck"], "cv": cross["cv"],
                        "clen": state["clen"]}
                 h, _ = B.attention_decode(lp["cross"], h, cfg, cst,
                                           positions, cross=True)
                 h = B.mlp_apply(lp["mlp"], h, cfg)
-                return h, kv_persist(kv, st)
+                return h, new_kv
             x, new_kv = jax.lax.scan(
                 body, x, (params["blocks"], state["kv"], state["cross"]))
             state = dict(state, kv=new_kv)

@@ -47,6 +47,8 @@ SNAPSHOT_KEYS_PAGED = frozenset({
     "pool_alloc_total", "pool_free_total", "pool_retain_total",
     "pool_evict_total", "pool_reserve_total", "pool_release_total",
     "cow_copies", "table_uploads", "table_upload_bytes",
+    "table_rows_uploaded", "paged_attn",
+    "kv_pages_read", "kv_pages_read_dense_equiv", "kv_pages_read_bytes",
 })
 
 #: additional keys on a ``SpeculativeEngine``
@@ -140,6 +142,39 @@ def check_byte_parity(snap: Dict[str, Any],
     return []
 
 
+def check_paged_pages_parity(snap: Dict[str, Any]) -> List[str]:
+    """Cross-check the fused paged-attention byte counter against the
+    KV append stream: one pool page holds ``kv_page_size`` token rows,
+    and a row's bytes are ``kv_bytes_appended / kv_rows_appended`` (the
+    packed per-token figure the engine already accounts), so
+
+        kv_pages_read_bytes == kv_pages_read x page_size x bytes/row
+
+    within ``BYTE_TOLERANCE``. Skips cleanly when the run never attended
+    through the table (``paged_attn`` off, or no pages read) or appended
+    no rows (nothing to derive the per-row figure from)."""
+    pages = snap.get("kv_pages_read", 0)
+    rows = snap.get("kv_rows_appended", 0)
+    if not snap.get("paged_attn") or not pages or not rows:
+        return []
+    per_row = snap.get("kv_bytes_appended", 0) / rows
+    want = pages * snap.get("kv_page_size", 0) * per_row
+    got = snap.get("kv_pages_read_bytes", 0)
+    if want == 0:
+        if got != 0:
+            return [f"kv_pages_read_bytes={got} but the append stream "
+                    "predicts 0 (dense KV rows)"]
+        return []
+    rel = abs(got - want) / want
+    if rel > BYTE_TOLERANCE:
+        return [
+            f"kv_pages_read_bytes={got} deviates {rel:.2%} from the "
+            f"append-stream model ({pages} pages x "
+            f"{snap.get('kv_page_size', 0)} rows x {per_row:.1f} B = "
+            f"{want:.0f} B); tolerance {BYTE_TOLERANCE:.0%}"]
+    return []
+
+
 def validate_metrics_jsonl(path: str) -> Tuple[Dict[str, int], List[str]]:
     """Validate one ``--metrics-out`` stream end-to-end.
 
@@ -216,6 +251,8 @@ def validate_metrics_jsonl(path: str) -> Tuple[Dict[str, int], List[str]]:
                     f"serve.metrics [{mode}] unexpected keys: "
                     f"{sorted(extra)}")
         errors.extend(check_byte_parity(last_serve))
+        if paged:
+            errors.extend(check_paged_pages_parity(last_serve))
         if spec:
             errors.extend(check_byte_parity(last_serve, "draft_"))
     if last_train:

@@ -32,6 +32,7 @@ engine does not evict mid-sequence.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import secrets
 import time
@@ -127,6 +128,11 @@ class ServeEngine:
     kv_pool_pages: Optional[int] = None  # None: slots x pages/seq (no
     #                                      over-commit); smaller values
     #                                      over-commit slots vs. the pool
+    # paged decode routing: True (default) attends straight through the
+    # page table with the fused kernel (kernels.paged_attention) — KV
+    # bytes read per tick scale with pages actually live; False demotes
+    # to the gather-materialize parity oracle. No effect in dense mode.
+    paged_attn: bool = True
     # observability: a Tracer for span/event emission (None: the
     # process-wide ring-only default) and an optional cadence — every
     # ``metrics_interval`` ticks a full ``serve.metrics`` snapshot event
@@ -155,7 +161,7 @@ class ServeEngine:
                 comp = dataclasses.replace(
                     comp, kv_bits=max(widths), kv_layer_bits=widths)
             self.cfg = dataclasses.replace(self.cfg, compression=comp)
-        self.lm = LM(self.cfg)
+        self.lm = LM(self.cfg, paged_attn=self.paged_attn)
         self.params = self.lm.init(prng_key(0))
         self.weight_plan = None
         if self.pack_weights or self.plan is not None:
@@ -200,10 +206,18 @@ class ServeEngine:
                 self.kv_pool_pages = self.n_slots * self._max_pages
             self.pool = KVPagePool(self.kv_pool_pages, self.kv_page_size)
             self.pool.on_event = self.tracer.event
-            # host-side page tables (0 = scrap); pushed to device before
-            # every jitted call because donation consumes the device copy
+            # The authoritative page table is DEVICE-resident: it rides
+            # through every donated jitted call inside the state dict, so
+            # it survives donation. The host copy here is a *shadow* for
+            # admission/eviction bookkeeping; per-tick mutations mark
+            # their rows dirty and _push_tables scatters only those rows
+            # (skipping the transfer entirely on clean ticks).
             self._table = np.zeros((self.n_slots, self._max_pages),
                                    np.int32)
+            self._dirty_rows: set = set()
+            # one scatter-update program per pow-2 dirty-row bucket
+            self._table_scatter = jit(
+                lambda t, i, r: t.at[i].set(r), donate_argnums=(0,))
             self.state = self.lm.init_paged_decode_state(
                 self.n_slots, self.max_seq_len, self.kv_page_size,
                 self.kv_pool_pages)
@@ -245,6 +259,9 @@ class ServeEngine:
         self._cow_copies = 0
         self._table_uploads = 0
         self._table_upload_bytes = 0
+        self._table_rows_uploaded = 0
+        self._kv_pages_read = 0
+        self._kv_pages_read_dense_equiv = 0
         # Sampling key derivation: base = PRNGKey(tag) folded with a
         # per-engine nonce, then per tick fold in the tick counter and per
         # slot the slot index. Without the nonce a restarted engine
@@ -420,6 +437,7 @@ class ServeEngine:
                 req.reserved_pages -= 1
                 req.deferred_register.append((i, key))
             self._table[slot, i] = page
+            self._dirty_rows.add(slot)
             req.n_pages += 1
         req.pages_peak = max(req.pages_peak, req.n_pages)
         skip = req.shared_pages * self.kv_page_size
@@ -452,6 +470,7 @@ class ServeEngine:
         while req.n_pages < needed:
             page = self._alloc_page(req)
             self._table[req.slot, req.n_pages] = page
+            self._dirty_rows.add(req.slot)
             req.n_pages += 1
         req.pages_peak = max(req.pages_peak, req.n_pages)
 
@@ -478,6 +497,7 @@ class ServeEngine:
         self._cow_copies += 1
         self.tracer.event("serve.cow", rid=req.rid, src=page, dst=fresh)
         self._table[req.slot, idx] = fresh
+        self._dirty_rows.add(req.slot)
         self.pool.free(page)               # drop our share of the original
         if idx < req.shared_pages:
             req.shared_pages = idx
@@ -498,6 +518,7 @@ class ServeEngine:
             req.n_pages -= 1
             page = int(self._table[req.slot, req.n_pages])
             self._table[req.slot, req.n_pages] = 0
+            self._dirty_rows.add(req.slot)
             sole = self.pool.refcount(page) == 1
             self.pool.free(page)
             if sole:
@@ -525,19 +546,107 @@ class ServeEngine:
         for i in range(req.n_pages):
             self.pool.free(int(self._table[req.slot, i]))
         self._table[req.slot, :] = 0
+        if req.n_pages:
+            self._dirty_rows.add(req.slot)
         req.n_pages = 0
         req.deferred_register.clear()      # unpublished keys die with us
         self.pool.release(req.reserved_pages)
         req.reserved_pages = 0
 
+    def _table_delta(self):
+        """(idx, rows) int32 arrays covering the dirty slots, padded up
+        to a power-of-two bucket by repeating the first dirty index
+        (idempotent under ``at[].set`` — same row, same data), so the
+        scatter jit compiles O(log slots) programs instead of one per
+        distinct dirty count."""
+        idx = sorted(self._dirty_rows)
+        n = 1
+        while n < len(idx):
+            n *= 2
+        idx = np.asarray(idx + [idx[0]] * (n - len(idx)), np.int32)
+        return idx, self._table[idx]
+
     def _push_tables(self) -> None:
-        """Upload the host page table before a jitted call (donation
-        consumed the previous device copy). Overridable — the
-        speculative engine pushes the same table into its draft state."""
+        """Sync the device-resident page table before a jitted call.
+
+        The authoritative table lives on device and rides through every
+        donated call inside the state dict; the host ``_table`` is a
+        shadow for admission/eviction bookkeeping. A tick that mutated
+        no table row skips the transfer entirely; otherwise only the
+        dirty rows travel, through a small scatter-update jit — unless
+        at least half the slots are dirty (admission bursts), where one
+        full upload beats many scattered rows. Overridable table
+        application (``_apply_table_update``) lets the speculative
+        engine mirror the same delta into its draft state."""
+        if not self._dirty_rows:
+            return
+        rows_dirty = len(self._dirty_rows)
+        if 2 * rows_dirty >= self.n_slots:
+            idx, rows = None, None
+            nbytes = self._table.nbytes
+        else:
+            idx, rows = self._table_delta()
+            nbytes = int(idx.nbytes + rows.nbytes)
+        with self.tracer.span("serve.h2d_table", bytes=nbytes,
+                              rows=rows_dirty,
+                              mode="full" if idx is None else "delta"):
+            self._apply_table_update(idx, rows)
+        self._dirty_rows.clear()
         self._table_uploads += 1
-        self._table_upload_bytes += self._table.nbytes
-        with self.tracer.span("serve.h2d_table", bytes=self._table.nbytes):
+        self._table_upload_bytes += nbytes
+        self._table_rows_uploaded += rows_dirty
+        obs.REGISTRY.counter(
+            "serve_table_rows_uploaded_total",
+            "Dirty page-table rows uploaded to the device table.",
+        ).inc(rows_dirty)
+
+    def _apply_table_update(self, idx, rows) -> None:
+        """Apply one table delta (or a full refresh when ``idx`` is
+        None) to the device-resident table. Overridable — the
+        speculative engine applies the identical update to its draft
+        state's table."""
+        if idx is None:
             self.state["table"] = jnp.asarray(self._table)
+        else:
+            self.state["table"] = self._table_scatter(
+                self.state["table"], jnp.asarray(idx), jnp.asarray(rows))
+
+    def _count_pages_read(self, len0s, positions: int) -> Optional[int]:
+        """Analytic pages the fused paged-attention path touches in one
+        jitted call that walks ``positions`` KV-append steps: at step i
+        a resident slot with ``len0`` committed rows attends over
+        ``ceil((len0 + i) / page_size)`` live pages (one *logical* page
+        spans every layer's K and V rows for those positions — the same
+        convention as ``kv_bytes_per_token``). Dead slots sit on the
+        scrap page, which the kernel's revisit elision dedupes. Returns
+        None when the call does not attend through the table (dense
+        mode, or the gather oracle — which always reads
+        slots x max_pages); also accrues the dense-equivalent figure so
+        the pages-actually-live win is reportable."""
+        if not (self.paged and self.paged_attn):
+            return None
+        pg = self.kv_page_size
+        pages = 0
+        for len0 in len0s:
+            for i in range(1, positions + 1):
+                pages += -(-min(len0 + i, self.max_seq_len) // pg)
+        self._kv_pages_read += pages
+        self._kv_pages_read_dense_equiv += (
+            positions * self.n_slots * self._max_pages)
+        obs.REGISTRY.counter(
+            "kv_pages_read_total",
+            "KV pool pages the fused paged-attention path reads.",
+        ).inc(pages)
+        return pages
+
+    def _paged_attn_span(self, pages: Optional[int], positions: int):
+        """Span around a fused paged-attention call (no-op context when
+        the call is not fused-paged)."""
+        if pages is None:
+            return contextlib.nullcontext()
+        return self.tracer.span(
+            "serve.paged_attn", pages=pages, positions=positions,
+            dense_equiv_pages=positions * self.n_slots * self._max_pages)
 
     def _ingest_prompts(self) -> None:
         """Stream pending prompts through ``lm.prefill_step`` in chunks of
@@ -566,6 +675,8 @@ class ServeEngine:
             chunk = min(chunk, self.prefill_chunk)
             tokens = np.zeros((self.n_slots, chunk), np.int32)
             n_valid = np.zeros((self.n_slots,), np.int32)
+            len0s = ([r.kv_len for r in self._active.values()]
+                     if self.paged else ())
             for rid, toks in pending.items():
                 req = self._active[rid]
                 take = min(chunk, len(toks) - 1)
@@ -581,8 +692,10 @@ class ServeEngine:
             rows = int(n_valid.sum())
             self._kv_rows_appended += rows
             self._kv_rows_committed += rows
+            pages = self._count_pages_read(len0s, chunk)
             with self.tracer.span("serve.prefill", chunk=chunk, rows=rows,
-                                  requests=len(pending)):
+                                  requests=len(pending)), \
+                    self._paged_attn_span(pages, chunk):
                 self._prefill_call(jnp.asarray(tokens),
                                    jnp.asarray(n_valid))
 
@@ -627,7 +740,10 @@ class ServeEngine:
         rows = len(self._active)
         self._kv_rows_appended += rows
         self._kv_rows_committed += rows
-        with self.tracer.span("serve.decode", requests=rows):
+        pages = self._count_pages_read(
+            [r.kv_len for r in self._active.values()], 1)
+        with self.tracer.span("serve.decode", requests=rows), \
+                self._paged_attn_span(pages, 1):
             logits, self.state = self._step(self.params, self.state, toks)
         if self.paged:
             for req in self._active.values():
@@ -742,6 +858,18 @@ class ServeEngine:
                 "cow_copies": self._cow_copies,
                 "table_uploads": self._table_uploads,
                 "table_upload_bytes": self._table_upload_bytes,
+                "table_rows_uploaded": self._table_rows_uploaded,
+                "paged_attn": bool(self.paged_attn),
+                "kv_pages_read": self._kv_pages_read,
+                "kv_pages_read_dense_equiv":
+                    self._kv_pages_read_dense_equiv,
+                # one logical page read = page_size rows across every
+                # layer's K+V at the resolved widths — the same per-row
+                # constant kv_bytes_appended uses, which is what the
+                # obs.validate paged cross-check pins
+                "kv_pages_read_bytes":
+                    self._kv_pages_read * self.kv_page_size
+                    * self._kv_bytes_per_row,
             })
         return snap
 

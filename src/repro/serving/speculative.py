@@ -226,7 +226,7 @@ class SpeculativeEngine(ServeEngine):
             self.cfg, compression=dataclasses.replace(
                 self.cfg.compression, kv_bits=self.draft_kv_bits,
                 kv_layer_bits=draft_klb))
-        self.draft_lm = LM(self.draft_cfg)
+        self.draft_lm = LM(self.draft_cfg, paged_attn=self.paged_attn)
         if self.paged:
             # the draft's paged pool mirrors the target's: same page ids,
             # same per-slot table, its own (narrower) physical buffers —
@@ -344,7 +344,13 @@ class SpeculativeEngine(ServeEngine):
         vt = jnp.concatenate([t0, drafts], axis=1)       # (B, k+1)
         self._decode_calls += 1
         self._weight_passes += 1                 # one full-width verify
-        with self.tracer.span("serve.verify", positions=self.k + 1):
+        # fused-paged verify walks k+1 appended positions through the
+        # target's page table; the draft's (narrower) pool reads ride the
+        # same tables and are not double-counted here
+        pages = self._count_pages_read(
+            [r.kv_len for r in self._active.values()], self.k + 1)
+        with self.tracer.span("serve.verify", positions=self.k + 1), \
+                self._paged_attn_span(pages, self.k + 1):
             vlogits, self.state = self._verify(self.params, self.state, vt)
         peak_rows = (self.k + 1) * len(self._active)
         self._kv_rows_appended += peak_rows
@@ -550,9 +556,19 @@ class SpeculativeEngine(ServeEngine):
         self.draft_state["kv"] = _pool_copy_page(
             self.draft_state["kv"], src, dst)
 
-    def _push_tables(self) -> None:
-        super()._push_tables()            # one table drives both pools
-        self.draft_state["table"] = jnp.asarray(self._table)
+    def _apply_table_update(self, idx, rows) -> None:
+        # one table drives both pools: the identical full refresh or
+        # dirty-row scatter lands on the draft state's device table, so
+        # a clean tick skips both transfers and a delta tick ships only
+        # the dirty rows twice (target + draft) instead of two full
+        # tables
+        super()._apply_table_update(idx, rows)
+        if idx is None:
+            self.draft_state["table"] = jnp.asarray(self._table)
+        else:
+            self.draft_state["table"] = self._table_scatter(
+                self.draft_state["table"], jnp.asarray(idx),
+                jnp.asarray(rows))
 
     # -- stats ----------------------------------------------------------------
     @property

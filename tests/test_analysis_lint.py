@@ -225,8 +225,8 @@ def test_interval_edges():
 
 def test_dispatch_lint_clean(dense_cfg, dense_params):
     findings, traced = lint_dispatch(dense_cfg, params=dense_params)
-    assert set(traced) == {"decode_step", "prefill_step", "verify_step",
-                           "train_loss"}
+    assert set(traced) == {"decode_step", "paged_decode_step",
+                           "prefill_step", "verify_step", "train_loss"}
     assert not [f for f in findings if f.severity == "error"]
 
 
